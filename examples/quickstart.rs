@@ -1,0 +1,68 @@
+//! Quickstart: load the AOT artifacts, generate text from the real
+//! MiniQwen model through the PJRT runtime, and run one tiny simulated
+//! rollout with the full Heddle control plane.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use heddle::config::{PolicyConfig, SimConfig};
+use heddle::model::sample_top_p;
+use heddle::predictor::history_workload;
+use heddle::runtime::Engine;
+use heddle::sim::simulate;
+use heddle::util::rng::Rng;
+use heddle::workload::{generate, Domain, WorkloadConfig};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. The real model through the three-layer stack ----------------
+    let engine = Engine::load(Path::new("artifacts"))?;
+    let m = &engine.manifest.model;
+    println!(
+        "loaded MiniQwen: ~{:.1}M params, vocab={}, max_seq={}, {} executables",
+        m.n_params() as f64 / 1e6,
+        m.vocab,
+        m.max_seq,
+        engine.manifest.executables.len()
+    );
+
+    // Prefill a prompt, decode 32 tokens with nucleus sampling.
+    let mut kv = engine.new_kv();
+    let prompt: Vec<i32> = (2..18).collect();
+    let mut logits = engine.extend(&mut kv, &prompt)?;
+    let mut rng = Rng::new(7);
+    let mut out = Vec::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..32 {
+        let tok = sample_top_p(&logits, 1.0, 0.9, &mut rng) as i32;
+        out.push(tok);
+        let mut entries = vec![(tok, &mut kv)];
+        logits = engine.decode_step(&mut entries)?.row(0).to_vec();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "generated 32 tokens in {:.1} ms ({:.1} tok/s): {:?}...",
+        dt * 1e3,
+        32.0 / dt,
+        &out[..8]
+    );
+
+    // ---- 2. A tiny rollout through the full control plane ---------------
+    let mut cfg = SimConfig::default();
+    cfg.cluster.n_gpus = 8;
+    cfg.cluster.max_batch_per_worker = 16;
+    cfg.policy = PolicyConfig::heddle();
+    let history = history_workload(Domain::Coding, 1);
+    let specs = generate(&WorkloadConfig::new(Domain::Coding, 6, 42));
+    let heddle = simulate(&cfg, &history, &specs);
+    cfg.policy = PolicyConfig::slime(1);
+    let slime = simulate(&cfg, &history, &specs);
+    println!("{}", heddle.summary("heddle"));
+    println!("{}", slime.summary("slime "));
+    println!(
+        "speedup vs slime: {:.2}x",
+        slime.makespan / heddle.makespan
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! End-to-end validation (DESIGN.md §6): serve a full agentic rollout
+//! batch on the REAL MiniQwen model through the complete Heddle stack —
+//! PJRT decode/prefill, nucleus sampling, wall-clock tool calls,
+//! progressive prediction, PPS scheduling, DP placement, and live KV
+//! migration — and compare against a step-centric baseline on the same
+//! workload. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_rollout
+//! ```
+
+use heddle::config::PolicyConfig;
+use heddle::predictor::history_workload;
+use heddle::runtime::Engine;
+use heddle::serve::{serve_rollout, ServeConfig};
+use heddle::workload::{generate, Domain, WorkloadConfig};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load(Path::new("artifacts"))?;
+    let args = heddle::util::cli::Args::from_env();
+    let n_prompts = args.get_usize("prompts", 4);
+    let seed = args.get_u64("seed", 11);
+
+    let mut wl = WorkloadConfig::new(Domain::Coding, n_prompts, seed);
+    wl.group_size = 8;
+    let specs = generate(&wl);
+    let history = history_workload(Domain::Coding, seed);
+    println!(
+        "serving {} trajectories ({} prompts x {} samples) on MiniQwen",
+        specs.len(),
+        n_prompts,
+        wl.group_size
+    );
+
+    let mut results = Vec::new();
+    for (name, policy) in [
+        ("heddle", PolicyConfig::heddle()),
+        ("rr+least-load (slime)", PolicyConfig::slime(1)),
+        ("rr+cache-aware (verl)", PolicyConfig::verl(1)),
+    ] {
+        let cfg = ServeConfig {
+            n_workers: 4,
+            max_batch: 8,
+            policy,
+            seed,
+            ..Default::default()
+        };
+        let out = serve_rollout(&engine, &cfg, &history, &specs)?;
+        println!(
+            "{name:24} wall={:7.2}s tokens={:6} throughput={:7.1} tok/s \
+             tail_ratio={:.2} queue(mean)={:.3}s migrations={} \
+             recomputed={} tokens",
+            out.wall_seconds,
+            out.tokens_generated,
+            out.throughput(),
+            out.report.tail_ratio(),
+            out.report.mean_queue_delay(),
+            out.report.total_migrations,
+            out.report.total_recomputed_tokens,
+        );
+        if out.report.total_migrations > 0 {
+            println!(
+                "{:24} migration: {} total bytes, mean {:.0} µs/transfer",
+                "", out.migrated_bytes, out.mean_migration_us
+            );
+        }
+        results.push((name, out));
+    }
+
+    let base = results
+        .iter()
+        .skip(1)
+        .map(|(_, o)| o.wall_seconds)
+        .fold(f64::INFINITY, f64::min);
+    let heddle = results[0].1.wall_seconds;
+    println!(
+        "\nend-to-end speedup vs best step-centric baseline: {:.2}x",
+        base / heddle
+    );
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Paper-scale cluster simulation: the Fig. 12 experiment at 64 GPUs —
+//! Heddle vs Verl / Verl* / Slime across domains and model sizes.
+//!
+//! ```sh
+//! cargo run --release --example simulate_cluster [--gpus 64] [--prompts 16]
+//! ```
+
+use heddle::config::{ModelCost, PolicyConfig, SimConfig};
+use heddle::predictor::history_workload;
+use heddle::sim::simulate;
+use heddle::util::cli::Args;
+use heddle::workload::{generate, Domain, WorkloadConfig};
+
+fn main() {
+    let args = Args::from_env();
+    let gpus = args.get_usize("gpus", 64);
+    let prompts = args.get_usize("prompts", 16);
+    let seed = args.get_u64("seed", 1);
+
+    println!("cluster: {gpus} GPUs | {prompts} prompts x 16 samples per domain\n");
+    for model in [
+        ModelCost::qwen3_8b(),
+        ModelCost::qwen3_14b(),
+        ModelCost::qwen3_32b(),
+    ] {
+        let base_mp = model.min_mp;
+        for domain in Domain::ALL {
+            let specs =
+                generate(&WorkloadConfig::new(domain, prompts, seed));
+            let history = history_workload(domain, seed);
+            let mut rows = Vec::new();
+            for (name, policy) in [
+                ("heddle", PolicyConfig::heddle()),
+                ("verl", PolicyConfig::verl(base_mp)),
+                ("verl*", PolicyConfig::verl_star(base_mp)),
+                ("slime", PolicyConfig::slime(base_mp)),
+            ] {
+                let mut cfg = SimConfig::default();
+                cfg.cluster.n_gpus = gpus;
+                cfg.model = model.clone();
+                cfg.policy = policy;
+                cfg.seed = seed;
+                let r = simulate(&cfg, &history, &specs);
+                rows.push((name, r.throughput(), r.makespan));
+            }
+            let heddle_tp = rows[0].1;
+            print!("{:10} {:8}", model.name, domain.name());
+            for (name, tp, _) in &rows {
+                print!(" | {name}: {tp:7.0} tok/s");
+            }
+            let best_baseline =
+                rows[1..].iter().map(|r| r.1).fold(0.0, f64::max);
+            println!("  => speedup {:.2}x", heddle_tp / best_baseline);
+        }
+        println!();
+    }
+}

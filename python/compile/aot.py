@@ -1,0 +1,182 @@
+"""AOT compile path: lower every executable to HLO *text* + manifest.
+
+This is the only place Python touches the system. ``make artifacts`` runs
+it once; afterwards the Rust binary is self-contained: it reads
+``artifacts/manifest.json``, loads ``weights.npz``, parses the
+``*.hlo.txt`` modules via ``HloModuleProto::from_text_file`` and compiles
+them on the PJRT CPU client.
+
+HLO **text** (never ``.serialize()``) is the interchange format: jax >=
+0.5 emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted executables (see DESIGN.md §3):
+  decode_b{B}          B in DECODE_BATCHES — the Pallas-kernel hot path
+  extend_b{B}_c{C}     chunked prefill for prompts / tool outputs
+  predictor_b{B}       trajectory-length MLP (paper §4.1)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import predictor as P
+
+DECODE_BATCHES = [1, 2, 4, 8]
+EXTEND_SHAPES = [(1, 32), (1, 128), (4, 32), (4, 128)]
+PREDICTOR_BATCHES = [1, 64]
+
+WEIGHT_SEED = 42
+PREDICTOR_SEED = 7
+
+
+def to_hlo_text(lowered, return_tuple: bool) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def weight_specs(cfg):
+    shapes = M.param_shapes(cfg)
+    return tuple(spec(shapes[n]) for n in M.param_order(cfg))
+
+
+def lower_decode(cfg, batch):
+    kv = spec(M.kv_cache_shape(cfg, batch))
+    lowered = jax.jit(M.decode_step_flat).lower(
+        weight_specs(cfg),
+        spec((batch,), jnp.int32),
+        spec((batch,), jnp.int32),
+        kv,
+        kv,
+    )
+    return to_hlo_text(lowered, return_tuple=False)
+
+
+def lower_extend(cfg, batch, chunk):
+    kv = spec(M.kv_cache_shape(cfg, batch))
+    lowered = jax.jit(M.extend_flat).lower(
+        weight_specs(cfg),
+        spec((batch, chunk), jnp.int32),
+        spec((batch,), jnp.int32),
+        spec((batch,), jnp.int32),
+        kv,
+        kv,
+    )
+    return to_hlo_text(lowered, return_tuple=False)
+
+
+def lower_predictor(batch):
+    shapes = P.pred_param_shapes()
+    w = tuple(spec(shapes[n]) for n in P.PRED_ORDER)
+    lowered = jax.jit(P.predictor_apply_flat).lower(
+        w, spec((batch, P.N_FEATURES))
+    )
+    return to_hlo_text(lowered, return_tuple=False)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--out",
+        default=None,
+        help="compat: a file path whose parent directory is used as out-dir",
+    )
+    parser.add_argument("--skip-train", action="store_true",
+                        help="random predictor weights (CI speed)")
+    args = parser.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = M.MINI
+
+    # --- weights -----------------------------------------------------------
+    params = M.init_params(jax.random.PRNGKey(WEIGHT_SEED), cfg)
+    if args.skip_train:
+        pred_params = P.init_predictor(jax.random.PRNGKey(PREDICTOR_SEED))
+        pred_loss = float("nan")
+    else:
+        pred_params, pred_loss = P.train_predictor(seed=PREDICTOR_SEED)
+        print(f"predictor trained: final mse(log1p)={pred_loss:.4f}")
+
+    npz = {name: np.asarray(params[name]) for name in M.param_order(cfg)}
+    npz.update(
+        {f"pred.{n}": np.asarray(pred_params[n]) for n in P.PRED_ORDER}
+    )
+    np.savez(os.path.join(out_dir, "weights.npz"), **npz)
+
+    # --- executables ---------------------------------------------------------
+    executables = []
+
+    def emit(name, kind, text, meta):
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        executables.append({"name": name, "file": fname, "kind": kind, **meta})
+        print(f"  {name}: {len(text)} chars")
+
+    for b in DECODE_BATCHES:
+        emit(f"decode_b{b}", "decode", lower_decode(cfg, b), {"batch": b})
+    for b, c in EXTEND_SHAPES:
+        emit(
+            f"extend_b{b}_c{c}",
+            "extend",
+            lower_extend(cfg, b, c),
+            {"batch": b, "chunk": c},
+        )
+    for b in PREDICTOR_BATCHES:
+        emit(f"predictor_b{b}", "predictor", lower_predictor(b), {"batch": b})
+
+    manifest = {
+        "version": 1,
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "ffn_hidden": cfg.ffn_hidden,
+            "max_seq": cfg.max_seq,
+            "rope_theta": cfg.rope_theta,
+            "norm_eps": cfg.norm_eps,
+            "weight_seed": WEIGHT_SEED,
+        },
+        "weights": {
+            "file": "weights.npz",
+            "order": M.param_order(cfg),
+            "pred_order": [f"pred.{n}" for n in P.PRED_ORDER],
+        },
+        "predictor": {
+            "n_features": P.N_FEATURES,
+            "hidden": P.HIDDEN,
+            "train_mse_log1p": None if args.skip_train else pred_loss,
+        },
+        "executables": executables,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(executables)} executables + manifest to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: fused single-step (decode) attention over a KV cache.
+
+This is the rollout hot-spot: every generated token of every trajectory
+runs one decode-attention per layer. The paper's backend (SGLang) uses a
+CUDA flash-decoding kernel where threadblocks tile the KV sequence in
+shared memory; the TPU re-think (DESIGN.md §Hardware-Adaptation) maps that
+to a Pallas grid over (batch, kv_head) with the head's full (S, d) K/V
+tile resident in VMEM, contractions expressed as `dot`s so a real TPU
+lowering targets the MXU, and warp-divergence-style early exit replaced by
+a `broadcasted_iota < length` mask over the fixed-size cache ring.
+
+The kernel is always lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so the interpret path is both the
+correctness oracle target and the artifact we ship for CPU serving.
+Real-TPU efficiency is estimated from the BlockSpec (VMEM footprint, MXU
+utilisation) in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Large negative used for masked logits. Not -inf: a fully-masked row
+# (length 0 never happens in practice, but hypothesis will try it) must
+# not produce NaNs through softmax.
+_MASK_VALUE = -1e30
+
+
+def _decode_attention_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, scale):
+    """One (batch, kv_head) program: G query heads attend to one KV head.
+
+    Block shapes (leading singleton dims are the grid-mapped axes):
+      q_ref:   [1, G, D]     the G query heads sharing this KV head
+      k_ref:   [1, 1, S, D]  full cache ring for this head (VMEM tile)
+      v_ref:   [1, 1, S, D]
+      len_ref: [1, 1]        valid cache length for this batch element
+      o_ref:   [1, G, D]
+    """
+    q = q_ref[0]  # [G, D]
+    k = k_ref[0, 0]  # [S, D]
+    v = v_ref[0, 0]  # [S, D]
+    length = len_ref[0, 0]  # scalar int32
+
+    # [G, S] attention logits — a (G, D) x (D, S) dot: MXU-shaped.
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    scores = scores * scale
+
+    # Mask the ring beyond the valid length (replaces CUDA early-exit).
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(col < length, scores, _MASK_VALUE)
+
+    # Numerically-stable softmax.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / denom
+
+    # [G, S] x [S, D] -> [G, D]: second MXU contraction.
+    o_ref[0] = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k_cache, v_cache, lengths, *, interpret=True):
+    """Fused decode attention.
+
+    Args:
+      q:        [B, H, D] query for the newly generated token (H = Hkv * G).
+      k_cache:  [B, Hkv, S, D] key cache ring (entries >= length are junk).
+      v_cache:  [B, Hkv, S, D] value cache ring.
+      lengths:  [B] int32, number of valid cache entries (includes the
+                current token, whose K/V must already be written).
+
+    Returns:
+      [B, H, D] attention output.
+    """
+    b, h, d = q.shape
+    _, hkv, s, _ = k_cache.shape
+    assert h % hkv == 0, f"H={h} not a multiple of Hkv={hkv}"
+    g = h // hkv
+    scale = 1.0 / (d**0.5)
+
+    lengths2 = lengths.reshape(b, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_decode_attention_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hkv),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, lengths2)
+
+
+def vmem_footprint_bytes(h, hkv, s, d, dtype_bytes=4):
+    """Estimated per-program VMEM residency of the kernel (see §Perf).
+
+    One program holds: the q block, both (S, D) cache tiles, the scores /
+    probability matrix, and the output block.
+    """
+    g = h // hkv
+    q_o = 2 * g * d * dtype_bytes
+    kv = 2 * s * d * dtype_bytes
+    scores = g * s * 4  # f32 accumulate
+    return q_o + kv + scores

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps)
+assert the Pallas kernels match these to tight tolerances across shapes,
+dtypes, and cache lengths. Keep them boring and obviously correct.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_MASK_VALUE = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Reference decode attention. Same contract as kernels.attention.
+
+    q: [B, H, D]; k_cache/v_cache: [B, Hkv, S, D]; lengths: [B] int32.
+    Returns [B, H, D].
+    """
+    b, h, d = q.shape
+    _, hkv, s, _ = k_cache.shape
+    g = h // hkv
+    scale = 1.0 / (d**0.5)
+
+    # Expand GQA: [B, Hkv, G, D]
+    qg = q.reshape(b, hkv, g, d)
+    # scores[b, k, g, s]
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    col = jnp.arange(s)[None, None, None, :]
+    mask = col < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, _MASK_VALUE)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def full_attention_ref(q, k, v, q_pos):
+    """Reference chunked (extend/prefill) attention.
+
+    q: [B, C, H, D] queries for a chunk whose global positions are q_pos
+       ([B, C] int32). k/v: [B, Hkv, S, D] cache rings already containing
+       the chunk's keys. Masking is purely positional: key at ring slot j
+       is visible to the query at global position p iff j <= p (the ring
+       is written front-to-back, so slot index == global position here).
+    Returns [B, C, H, D].
+    """
+    b, c, h, d = q.shape
+    _, hkv, s, _ = k.shape
+    g = h // hkv
+    scale = 1.0 / (d**0.5)
+    qg = q.reshape(b, c, hkv, g, d)
+    scores = jnp.einsum("bckgd,bksd->bckgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    col = jnp.arange(s)[None, None, :]  # [1, 1, S]
+    vis = col <= q_pos[:, :, None]  # [B, C, S]
+    scores = jnp.where(vis[:, :, None, None, :], scores, _MASK_VALUE)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bckgs,bksd->bckgd", p, v.astype(jnp.float32))
+    return out.reshape(b, c, h, d).astype(q.dtype)

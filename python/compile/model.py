@@ -1,0 +1,262 @@
+"""L2: MiniQwen — the rollout model served by the Rust data plane.
+
+A small Qwen-style decoder (RMSNorm + RoPE + GQA attention + SwiGLU) used
+as the real-execution substrate for Heddle's rollout workers (DESIGN.md §1:
+the paper's Qwen3-8B/14B/32B are simulator cost models; this model runs
+for real on the PJRT-CPU path so every layer of the stack is exercised).
+
+Two entry points are AOT-lowered per batch bucket (see aot.py):
+
+  * ``decode_step`` — one token per trajectory; the hot path. Attention is
+    the L1 Pallas kernel (kernels.attention.decode_attention).
+  * ``extend`` — chunked prefill: writes a C-token chunk into the cache
+    ring at per-trajectory offsets and returns the logits of each
+    trajectory's last valid token. Used for prompts and for tool-output
+    re-ingestion after tool calls / migrations.
+
+The KV cache is a fixed-size ring ``[L, B, Hkv, S, D]`` passed in and out
+of every call; Rust keeps it device-resident between steps (execute_b) and
+only pulls it to the host on preemption / tool departure / migration.
+
+Weights are runtime inputs (flat, canonical order from ``param_order``),
+loaded by Rust from ``artifacts/weights.npz``. Baking them as HLO
+constants would bloat the text artifacts past parseability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import decode_attention
+from compile.kernels.ref import full_attention_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """MiniQwen hyperparameters. ``mini`` is the shipped configuration."""
+
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    ffn_hidden: int = 512
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    def __post_init__(self):
+        assert self.n_heads * self.head_dim == self.d_model
+        assert self.n_heads % self.n_kv_heads == 0
+
+
+MINI = Config()
+
+
+def param_order(cfg: Config) -> List[str]:
+    """Canonical flat weight order — the ABI between aot.py and Rust."""
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.attn_norm",
+            f"l{i}.wq",
+            f"l{i}.wk",
+            f"l{i}.wv",
+            f"l{i}.wo",
+            f"l{i}.mlp_norm",
+            f"l{i}.w_gate",
+            f"l{i}.w_up",
+            f"l{i}.w_down",
+        ]
+    names += ["final_norm", "unembed"]
+    return names
+
+
+def param_shapes(cfg: Config) -> Dict[str, tuple]:
+    kv_dim = cfg.n_kv_heads * cfg.head_dim
+    shapes = {"embed": (cfg.vocab, cfg.d_model)}
+    for i in range(cfg.n_layers):
+        shapes[f"l{i}.attn_norm"] = (cfg.d_model,)
+        shapes[f"l{i}.wq"] = (cfg.d_model, cfg.d_model)
+        shapes[f"l{i}.wk"] = (cfg.d_model, kv_dim)
+        shapes[f"l{i}.wv"] = (cfg.d_model, kv_dim)
+        shapes[f"l{i}.wo"] = (cfg.d_model, cfg.d_model)
+        shapes[f"l{i}.mlp_norm"] = (cfg.d_model,)
+        shapes[f"l{i}.w_gate"] = (cfg.d_model, cfg.ffn_hidden)
+        shapes[f"l{i}.w_up"] = (cfg.d_model, cfg.ffn_hidden)
+        shapes[f"l{i}.w_down"] = (cfg.ffn_hidden, cfg.d_model)
+    shapes["final_norm"] = (cfg.d_model,)
+    shapes["unembed"] = (cfg.d_model, cfg.vocab)
+    return shapes
+
+
+def init_params(rng: jax.Array, cfg: Config) -> Dict[str, jax.Array]:
+    """He-style random init, deterministic in the seed."""
+    shapes = param_shapes(cfg)
+    params = {}
+    keys = jax.random.split(rng, len(shapes))
+    for key, (name, shape) in zip(keys, sorted(shapes.items())):
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = (
+                jax.random.normal(key, shape, jnp.float32) * (fan_in**-0.5)
+            )
+    return params
+
+
+def flatten_params(params: Dict[str, jax.Array], cfg: Config):
+    return [params[name] for name in param_order(cfg)]
+
+
+def unflatten_params(flat, cfg: Config) -> Dict[str, jax.Array]:
+    return dict(zip(param_order(cfg), flat))
+
+
+def kv_cache_shape(cfg: Config, batch: int) -> tuple:
+    return (cfg.n_layers, batch, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+
+
+def init_kv_cache(cfg: Config, batch: int):
+    shape = kv_cache_shape(cfg, batch)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def _rms_norm(x, weight, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * weight
+
+
+def _rope(x, positions, theta):
+    """Rotary embedding. x: [..., n_heads, head_dim]; positions: [...]
+    broadcastable to x's leading dims."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None, None].astype(jnp.float32) * freqs  # [..., 1, half]
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)
+
+
+def _write_cache_token(cache_l, new, pos):
+    """Write one token's K or V into a layer's cache ring.
+
+    cache_l: [B, Hkv, S, D]; new: [B, Hkv, D]; pos: [B] int32.
+    """
+
+    def upd(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n[:, None, :], (0, p, 0))
+
+    return jax.vmap(upd)(cache_l, new, pos)
+
+
+def _write_cache_chunk(cache_l, new, start):
+    """Write a C-token chunk. cache_l: [B, Hkv, S, D]; new: [B, C, Hkv, D];
+    start: [B] int32."""
+
+    def upd(c, n, s):
+        # n: [C, Hkv, D] -> [Hkv, C, D]
+        return jax.lax.dynamic_update_slice(c, n.transpose(1, 0, 2), (0, s, 0))
+
+    return jax.vmap(upd)(cache_l, new, start)
+
+
+def decode_step(params, tokens, pos, k_cache, v_cache, cfg: Config = MINI):
+    """One decode step for every slot in the batch.
+
+    tokens: [B] int32 — the token sampled at the previous step.
+    pos:    [B] int32 — the ring position this token occupies (== number
+            of tokens already in the cache). The new K/V are written at
+            ``pos`` and attention sees lengths ``pos + 1``.
+    Returns (logits [B, vocab], k_cache, v_cache).
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens]  # [B, d]
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        h = _rms_norm(x, params[f"l{i}.attn_norm"], cfg.norm_eps)
+        q = (h @ params[f"l{i}.wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[f"l{i}.wk"]).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ params[f"l{i}.wv"]).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+        q = _rope(q, pos, cfg.rope_theta)
+        k = _rope(k, pos, cfg.rope_theta)
+        k_l = _write_cache_token(k_cache[i], k, pos)
+        v_l = _write_cache_token(v_cache[i], v, pos)
+        new_k.append(k_l)
+        new_v.append(v_l)
+        # L1 Pallas kernel — the fused decode-attention hot-spot.
+        attn = decode_attention(q, k_l, v_l, pos + 1)
+        x = x + attn.reshape(b, cfg.d_model) @ params[f"l{i}.wo"]
+        h2 = _rms_norm(x, params[f"l{i}.mlp_norm"], cfg.norm_eps)
+        gate = jax.nn.silu(h2 @ params[f"l{i}.w_gate"])
+        x = x + (gate * (h2 @ params[f"l{i}.w_up"])) @ params[f"l{i}.w_down"]
+    x = _rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["unembed"]
+    k_cache = jnp.stack(new_k)
+    v_cache = jnp.stack(new_v)
+    return logits, k_cache, v_cache
+
+
+def extend(params, tokens, start, valid, k_cache, v_cache, cfg: Config = MINI):
+    """Chunked prefill: ingest up to C tokens per trajectory.
+
+    tokens: [B, C] int32, right-padded; start: [B] int32 ring offset of
+    the chunk's first token; valid: [B] int32 number of real tokens in
+    the chunk (1 <= valid <= C).
+
+    Padded rows *are* written into the ring at start+valid..start+C-1 but
+    are never attended: a query at global position p only sees slots
+    <= p, and every later write lands exactly at the next position before
+    it enters any attention window (see DESIGN.md §4.1-notes). Returns
+    (logits [B, vocab] at each trajectory's last valid token, k, v).
+    """
+    b, c = tokens.shape
+    positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]  # [B, C]
+    x = params["embed"][tokens]  # [B, C, d]
+    for i in range(cfg.n_layers):
+        h = _rms_norm(x, params[f"l{i}.attn_norm"], cfg.norm_eps)
+        q = (h @ params[f"l{i}.wq"]).reshape(b, c, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[f"l{i}.wk"]).reshape(b, c, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ params[f"l{i}.wv"]).reshape(b, c, cfg.n_kv_heads, cfg.head_dim)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+        k_l = _write_cache_chunk(k_cache[i], k, start)
+        v_l = _write_cache_chunk(v_cache[i], v, start)
+        k_cache = k_cache.at[i].set(k_l)
+        v_cache = v_cache.at[i].set(v_l)
+        attn = full_attention_ref(q, k_l, v_l, positions)
+        x = x + attn.reshape(b, c, cfg.d_model) @ params[f"l{i}.wo"]
+        h2 = _rms_norm(x, params[f"l{i}.mlp_norm"], cfg.norm_eps)
+        gate = jax.nn.silu(h2 @ params[f"l{i}.w_gate"])
+        x = x + (gate * (h2 @ params[f"l{i}.w_up"])) @ params[f"l{i}.w_down"]
+    x = _rms_norm(x, params["final_norm"], cfg.norm_eps)
+    # Hidden state of each trajectory's last valid chunk token.
+    last = jnp.take_along_axis(
+        x, (valid - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]
+    logits = last @ params["unembed"]
+    return logits, k_cache, v_cache
+
+
+def decode_step_flat(flat_params, tokens, pos, k_cache, v_cache,
+                     cfg: Config = MINI):
+    """AOT entry point: weights as a flat positional tuple (Rust ABI)."""
+    return decode_step(unflatten_params(flat_params, cfg), tokens, pos,
+                       k_cache, v_cache, cfg)
+
+
+def extend_flat(flat_params, tokens, start, valid, k_cache, v_cache,
+                cfg: Config = MINI):
+    """AOT entry point: weights as a flat positional tuple (Rust ABI)."""
+    return extend(unflatten_params(flat_params, cfg), tokens, start, valid,
+                  k_cache, v_cache, cfg)

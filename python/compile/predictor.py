@@ -1,0 +1,208 @@
+"""L2: progressive trajectory-length predictor (the paper's §4.1).
+
+The paper fine-tunes a Qwen-0.6B regressor on (context, remaining_length)
+tuples harvested from historical rollouts and invokes it as a microservice
+after every agentic step. We reproduce the *mechanism* — a learned model
+whose input is the trajectory's accumulated runtime context and whose
+output is the predicted remaining length, trained offline in minutes and
+served off the critical path — with a compact MLP over an explicit
+feature vector (DESIGN.md §1 substitution table). The MLP is AOT-lowered
+to HLO and invoked from Rust exactly like the model executables; Rust
+additionally keeps an online feature regressor as a fallback/baseline.
+
+Feature vector (must match rust/src/predictor/features.rs):
+
+   0 log1p(prompt_len)            8 domain==coding
+   1 steps_so_far / 10           9 domain==search
+   2 log1p(tokens_so_far)        10 domain==math
+   3 log1p(tokens_last_step)     11 sampling temperature
+   4 log1p(avg_tokens_per_step)  12 log1p(group_mean_tokens_so_far)
+   5 failed_tool_frac            13 plan_complexity (prompt heuristic, 0-1)
+   6 log1p(avg_tool_latency_ms)  14 log1p(last_tool_latency_ms)
+   7 first_step_plan_len/1000    15 reserved (0)
+
+Target: log1p(remaining_tokens).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_FEATURES = 16
+HIDDEN = 64
+
+PRED_ORDER = ["w1", "b1", "w2", "b2", "w3", "b3"]
+
+
+def pred_param_shapes() -> Dict[str, tuple]:
+    return {
+        "w1": (N_FEATURES, HIDDEN),
+        "b1": (HIDDEN,),
+        "w2": (HIDDEN, HIDDEN),
+        "b2": (HIDDEN,),
+        "w3": (HIDDEN, 1),
+        "b3": (1,),
+    }
+
+
+def init_predictor(rng: jax.Array) -> Dict[str, jax.Array]:
+    shapes = pred_param_shapes()
+    keys = jax.random.split(rng, len(shapes))
+    params = {}
+    for key, (name, shape) in zip(keys, sorted(shapes.items())):
+        if name.startswith("b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            params[name] = jax.random.normal(key, shape, jnp.float32) * (
+                shape[0] ** -0.5
+            )
+    return params
+
+
+def predictor_apply(params: Dict[str, jax.Array], features: jax.Array):
+    """features: [B, N_FEATURES] -> predicted log1p(remaining) [B, 1]."""
+    h = jnp.tanh(features @ params["w1"] + params["b1"])
+    h = jnp.tanh(h @ params["w2"] + params["b2"])
+    return h @ params["w3"] + params["b3"]
+
+
+def predictor_apply_flat(flat, features):
+    """AOT entry point: weights as a flat positional tuple (Rust ABI)."""
+    return (predictor_apply(dict(zip(PRED_ORDER, flat)), features),)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic training corpus.
+#
+# Mirrors the generative model of rust/src/workload (documented there and in
+# DESIGN.md): a latent per-trajectory difficulty drives step count, tokens
+# per step, and tool-failure probability; failed tool calls spawn
+# rectification steps (the paper's Fig. 5 intra-group divergence source).
+# ---------------------------------------------------------------------------
+
+_DOMAINS = ["coding", "search", "math"]
+# (mean steps, tokens-per-step lognorm mu/sigma, tool latency ms, fail prob)
+_DOMAIN_PARAMS = {
+    "coding": (6.0, 5.2, 0.8, 450.0, 0.35),
+    "search": (4.0, 4.2, 0.7, 1400.0, 0.20),
+    "math": (3.0, 4.8, 0.9, 50.0, 0.25),
+}
+
+
+def synth_trajectory(rng: np.random.Generator, domain: str):
+    """One synthetic agentic trajectory -> list of per-step dicts."""
+    mean_steps, mu, sigma, tool_ms, fail_p = _DOMAIN_PARAMS[domain]
+    difficulty = float(np.clip(rng.normal(0.5, 0.25), 0.0, 1.0))
+    prompt_len = int(rng.integers(16, 128))
+    n_steps = max(1, int(rng.poisson(mean_steps * (0.5 + 1.5 * difficulty))))
+    steps = []
+    for s in range(n_steps):
+        tokens = int(np.clip(rng.lognormal(mu * (0.8 + 0.4 * difficulty),
+                                           sigma), 8, 4000))
+        failed = bool(rng.random() < fail_p * (0.5 + difficulty))
+        latency = float(rng.exponential(tool_ms))
+        steps.append({"tokens": tokens, "failed": failed, "latency": latency})
+        # A failure late in the trajectory can spawn rectification steps.
+        if failed and rng.random() < 0.5 and len(steps) < 40:
+            n_steps += 1
+    return {
+        "domain": domain,
+        "prompt_len": prompt_len,
+        "difficulty": difficulty,
+        "plan_len": int(rng.integers(50, 400) * (0.5 + difficulty)),
+        "temperature": 1.0,
+        "steps": steps,
+    }
+
+
+def features_from_prefix(traj, k: int, group_mean_tokens: float = 0.0):
+    """Feature vector after observing the first ``k`` steps (k may be 0)."""
+    steps = traj["steps"][:k]
+    tokens_so_far = sum(s["tokens"] for s in steps)
+    last = steps[-1]["tokens"] if steps else 0
+    avg = tokens_so_far / k if k else 0.0
+    fails = sum(1 for s in steps if s["failed"])
+    fail_frac = fails / k if k else 0.0
+    avg_lat = float(np.mean([s["latency"] for s in steps])) if steps else 0.0
+    last_lat = steps[-1]["latency"] if steps else 0.0
+    d = traj["domain"]
+    f = np.zeros(N_FEATURES, np.float32)
+    f[0] = np.log1p(traj["prompt_len"])
+    f[1] = k / 10.0
+    f[2] = np.log1p(tokens_so_far)
+    f[3] = np.log1p(last)
+    f[4] = np.log1p(avg)
+    f[5] = fail_frac
+    f[6] = np.log1p(avg_lat)
+    f[7] = (traj["plan_len"] if k >= 1 else 0) / 1000.0
+    f[8] = 1.0 if d == "coding" else 0.0
+    f[9] = 1.0 if d == "search" else 0.0
+    f[10] = 1.0 if d == "math" else 0.0
+    f[11] = traj["temperature"]
+    f[12] = np.log1p(group_mean_tokens)
+    f[13] = traj["difficulty"] if k >= 1 else 0.5  # plan reveals difficulty
+    f[14] = np.log1p(last_lat)
+    f[15] = 0.0
+    return f
+
+
+def build_dataset(seed: int = 0, n_traj: int = 3000):
+    rng = np.random.default_rng(seed)
+    xs, ys = [], []
+    for i in range(n_traj):
+        traj = synth_trajectory(rng, _DOMAINS[i % 3])
+        total = sum(s["tokens"] for s in traj["steps"])
+        seen = 0
+        for k in range(len(traj["steps"])):
+            xs.append(features_from_prefix(traj, k))
+            ys.append(np.log1p(total - seen))
+            seen += traj["steps"][k]["tokens"]
+    return np.stack(xs), np.array(ys, np.float32)[:, None]
+
+
+def train_predictor(seed: int = 0, epochs: int = 60, lr: float = 3e-3):
+    """Adam-trained MLP; converges in a few seconds (paper: 'minutes')."""
+    x, y = build_dataset(seed)
+    params = init_predictor(jax.random.PRNGKey(seed))
+
+    def loss_fn(p, xb, yb):
+        pred = predictor_apply(p, xb)
+        return jnp.mean(jnp.square(pred - yb))
+
+    opt_m = jax.tree.map(jnp.zeros_like, params)
+    opt_v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(p, m, v, t, xb, yb):
+        g = jax.grad(loss_fn)(p, xb, yb)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mhat = jax.tree.map(lambda a: a / (1 - 0.9**t), m)
+        vhat = jax.tree.map(lambda a: a / (1 - 0.999**t), v)
+        p = jax.tree.map(
+            lambda a, mm, vv: a - lr * mm / (jnp.sqrt(vv) + 1e-8), p, mhat, vhat
+        )
+        return p, m, v
+
+    n = x.shape[0]
+    bs = 512
+    rng = np.random.default_rng(seed + 1)
+    t = 0
+    for _ in range(epochs):
+        idx = rng.permutation(n)
+        for s in range(0, n - bs + 1, bs):
+            t += 1
+            sel = idx[s : s + bs]
+            params, opt_m, opt_v = step(
+                params, opt_m, opt_v, t, x[sel], y[sel]
+            )
+    final = float(loss_fn(params, x, y))
+    return params, final
+
+
+def flatten_predictor(params: Dict[str, jax.Array]) -> List[jax.Array]:
+    return [params[n] for n in PRED_ORDER]

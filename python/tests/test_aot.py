@@ -1,0 +1,108 @@
+"""AOT pipeline tests: lowering produces loadable HLO text and a coherent
+manifest. (Full-artifact generation is exercised by `make artifacts`; here
+we lower the smallest variants only to keep CI fast.)"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import predictor as P
+
+
+def entry_param_count(text: str) -> int:
+    """Number of parameters of the ENTRY computation (nested fusion
+    computations declare their own parameter(0..) — skip those)."""
+    in_entry = False
+    count = 0
+    for line in text.splitlines():
+        if line.startswith("ENTRY "):
+            in_entry = True
+            continue
+        if in_entry:
+            if line.startswith("}"):
+                break
+            if " parameter(" in line:
+                count += 1
+    return count
+
+
+class TestLowering:
+    def test_decode_hlo_text_parses_header(self):
+        text = aot.lower_decode(M.MINI, 1)
+        assert text.startswith("HloModule")
+        # 38 weights + tokens + pos + k + v = 42 parameters
+        assert entry_param_count(text) == len(M.param_order(M.MINI)) + 4
+
+    def test_extend_hlo_text(self):
+        text = aot.lower_extend(M.MINI, 1, 32)
+        assert text.startswith("HloModule")
+        assert entry_param_count(text) == len(M.param_order(M.MINI)) + 5
+
+    def test_predictor_hlo_text(self):
+        text = aot.lower_predictor(1)
+        assert text.startswith("HloModule")
+        assert entry_param_count(text) == len(P.PRED_ORDER) + 1
+
+    def test_no_custom_calls(self):
+        """interpret=True must lower the Pallas kernel to plain HLO — a
+        Mosaic custom-call would be unloadable on the CPU PJRT client."""
+        text = aot.lower_decode(M.MINI, 2)
+        assert "custom-call" not in text
+
+
+class TestArtifactsDir:
+    """Validate the artifacts produced by `make artifacts` when present."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    @pytest.fixture()
+    def manifest(self):
+        path = os.path.join(self.ART, "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_manifest_complete(self, manifest):
+        names = {e["name"] for e in manifest["executables"]}
+        for b in aot.DECODE_BATCHES:
+            assert f"decode_b{b}" in names
+        for b, c in aot.EXTEND_SHAPES:
+            assert f"extend_b{b}_c{c}" in names
+        for b in aot.PREDICTOR_BATCHES:
+            assert f"predictor_b{b}" in names
+
+    def test_all_files_exist(self, manifest):
+        for e in manifest["executables"]:
+            assert os.path.exists(os.path.join(self.ART, e["file"]))
+        assert os.path.exists(
+            os.path.join(self.ART, manifest["weights"]["file"])
+        )
+
+    def test_weights_match_manifest_order(self, manifest):
+        npz = np.load(os.path.join(self.ART, manifest["weights"]["file"]))
+        for name in manifest["weights"]["order"]:
+            assert name in npz, f"missing weight {name}"
+        for name in manifest["weights"]["pred_order"]:
+            assert name in npz
+
+    def test_weights_reproducible_from_seed(self, manifest):
+        """weights.npz must equal a fresh init from the recorded seed."""
+        npz = np.load(os.path.join(self.ART, manifest["weights"]["file"]))
+        params = M.init_params(
+            jax.random.PRNGKey(manifest["model"]["weight_seed"]), M.MINI
+        )
+        np.testing.assert_array_equal(
+            npz["embed"], np.asarray(params["embed"])
+        )
+
+    def test_model_config_matches(self, manifest):
+        m = manifest["model"]
+        assert m["vocab"] == M.MINI.vocab
+        assert m["max_seq"] == M.MINI.max_seq
+        assert m["n_layers"] == M.MINI.n_layers

@@ -1,0 +1,178 @@
+"""L2 correctness: MiniQwen decode/extend equivalence, shapes, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.MINI
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(42), CFG)
+
+
+def _prompt(rng, b, n):
+    return jnp.asarray(rng.integers(1, CFG.vocab, size=(b, n)), jnp.int32)
+
+
+class TestShapes:
+    def test_param_order_matches_shapes(self):
+        order = M.param_order(CFG)
+        shapes = M.param_shapes(CFG)
+        assert set(order) == set(shapes)
+        assert len(order) == 1 + CFG.n_layers * 9 + 2
+
+    def test_init_deterministic(self):
+        a = M.init_params(jax.random.PRNGKey(1), CFG)
+        b = M.init_params(jax.random.PRNGKey(1), CFG)
+        for n in M.param_order(CFG):
+            np.testing.assert_array_equal(np.asarray(a[n]), np.asarray(b[n]))
+
+    def test_decode_output_shapes(self, params):
+        b = 4
+        k, v = M.init_kv_cache(CFG, b)
+        logits, k, v = M.decode_step(
+            params, jnp.ones(b, jnp.int32), jnp.zeros(b, jnp.int32), k, v
+        )
+        assert logits.shape == (b, CFG.vocab)
+        assert k.shape == M.kv_cache_shape(CFG, b)
+
+    def test_extend_output_shapes(self, params):
+        b, c = 2, 32
+        k, v = M.init_kv_cache(CFG, b)
+        rng = np.random.default_rng(0)
+        logits, k, v = M.extend(
+            params,
+            _prompt(rng, b, c),
+            jnp.zeros(b, jnp.int32),
+            jnp.full((b,), c, jnp.int32),
+            k,
+            v,
+        )
+        assert logits.shape == (b, CFG.vocab)
+
+
+class TestEquivalence:
+    def test_extend_equals_stepwise_decode(self, params):
+        """Prefill-as-chunk must match token-by-token decode exactly."""
+        rng = np.random.default_rng(1)
+        b, n = 2, 8
+        toks = _prompt(rng, b, n)
+        k, v = M.init_kv_cache(CFG, b)
+        lg_a, k_a, v_a = M.extend(
+            params, toks, jnp.zeros(b, jnp.int32),
+            jnp.full((b,), n, jnp.int32), k, v
+        )
+        k_b, v_b = M.init_kv_cache(CFG, b)
+        for i in range(n):
+            lg_b, k_b, v_b = M.decode_step(
+                params, toks[:, i], jnp.full((b,), i, jnp.int32), k_b, v_b
+            )
+        np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(k_a), np.asarray(k_b),
+                                   atol=1e-4)
+
+    def test_ragged_extend_matches_per_row(self, params):
+        """Right-padded rows with different valid lengths must match the
+        same rows processed individually."""
+        rng = np.random.default_rng(2)
+        c = 32
+        toks = _prompt(rng, 2, c)
+        valid = jnp.array([5, 17], jnp.int32)
+        k, v = M.init_kv_cache(CFG, 2)
+        lg, _, _ = M.extend(params, toks, jnp.zeros(2, jnp.int32), valid, k, v)
+        for row in range(2):
+            k1, v1 = M.init_kv_cache(CFG, 1)
+            lg1, _, _ = M.extend(
+                params,
+                toks[row : row + 1],
+                jnp.zeros(1, jnp.int32),
+                valid[row : row + 1],
+                k1,
+                v1,
+            )
+            np.testing.assert_allclose(
+                np.asarray(lg[row]), np.asarray(lg1[0]), atol=1e-4
+            )
+
+    def test_two_chunk_extend_continuation(self, params):
+        """Extend at offset (tool-output ingestion) == one big extend."""
+        rng = np.random.default_rng(3)
+        toks = _prompt(rng, 1, 16)
+        k, v = M.init_kv_cache(CFG, 1)
+        lg_all, k_all, _ = M.extend(
+            params, toks, jnp.zeros(1, jnp.int32),
+            jnp.array([16], jnp.int32), k, v
+        )
+        k2, v2 = M.init_kv_cache(CFG, 1)
+        _, k2, v2 = M.extend(
+            params, toks[:, :10], jnp.zeros(1, jnp.int32),
+            jnp.array([10], jnp.int32), k2, v2
+        )
+        # Second chunk is right-padded to a bucket width like the Rust
+        # worker does; padding must not disturb the result.
+        pad = jnp.zeros((1, 10), jnp.int32)
+        chunk2 = jnp.concatenate([toks[:, 10:], pad], axis=1)
+        lg_c, k2, _ = M.extend(
+            params, chunk2, jnp.array([10], jnp.int32),
+            jnp.array([6], jnp.int32), k2, v2
+        )
+        np.testing.assert_allclose(np.asarray(lg_all), np.asarray(lg_c),
+                                   atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(k_all[:, :, :, :16]), np.asarray(k2[:, :, :, :16]),
+            atol=1e-4,
+        )
+
+    def test_batch_slot_independence(self, params):
+        """A trajectory's logits must not depend on its batch neighbours —
+        the property that lets the Rust worker batch arbitrary slots."""
+        rng = np.random.default_rng(4)
+        toks = _prompt(rng, 4, 8)
+        k, v = M.init_kv_cache(CFG, 4)
+        pos = jnp.array([3, 1, 7, 5], jnp.int32)
+        # Fill caches with junk beyond each pos; decode one token.
+        k = jnp.asarray(rng.normal(size=k.shape), jnp.float32)
+        v = jnp.asarray(rng.normal(size=v.shape), jnp.float32)
+        lg4, _, _ = M.decode_step(params, toks[:, 0], pos, k, v)
+        lg1, _, _ = M.decode_step(
+            params, toks[2:3, 0], pos[2:3], k[:, 2:3], v[:, 2:3]
+        )
+        np.testing.assert_allclose(np.asarray(lg4[2]), np.asarray(lg1[0]),
+                                   atol=1e-4)
+
+
+class TestNumerics:
+    def test_logits_finite(self, params):
+        rng = np.random.default_rng(5)
+        b = 8
+        k, v = M.init_kv_cache(CFG, b)
+        toks = jnp.asarray(rng.integers(0, CFG.vocab, size=b), jnp.int32)
+        logits, _, _ = M.decode_step(params, toks, jnp.zeros(b, jnp.int32),
+                                     k, v)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_long_generation_stays_finite(self, params):
+        k, v = M.init_kv_cache(CFG, 1)
+        tok = jnp.array([7], jnp.int32)
+        for i in range(CFG.max_seq):
+            logits, k, v = M.decode_step(
+                params, tok, jnp.array([i], jnp.int32), k, v
+            )
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_rope_position_sensitivity(self, params):
+        """Same token at different positions must produce different K."""
+        k, v = M.init_kv_cache(CFG, 2)
+        toks = jnp.array([11, 11], jnp.int32)
+        pos = jnp.array([0, 100], jnp.int32)
+        _, k_out, _ = M.decode_step(params, toks, pos, k, v)
+        a = np.asarray(k_out[0, 0, :, 0])  # layer0, slot0 wrote at 0
+        b = np.asarray(k_out[0, 1, :, 100])
+        assert not np.allclose(a, b)

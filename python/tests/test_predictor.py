@@ -1,0 +1,98 @@
+"""Predictor tests: the progressive property (paper §4.1) must hold —
+prediction error shrinks as more of the trajectory is observed."""
+
+import jax
+import numpy as np
+import pytest
+
+from compile import predictor as P
+
+
+@pytest.fixture(scope="module")
+def trained():
+    params, loss = P.train_predictor(seed=7, epochs=20)
+    return params, loss
+
+
+class TestDataset:
+    def test_deterministic(self):
+        x1, y1 = P.build_dataset(seed=3, n_traj=50)
+        x2, y2 = P.build_dataset(seed=3, n_traj=50)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+
+    def test_feature_width(self):
+        x, y = P.build_dataset(seed=0, n_traj=20)
+        assert x.shape[1] == P.N_FEATURES
+        assert y.shape == (x.shape[0], 1)
+
+    def test_long_tail_skew(self):
+        """Totals must be long-tailed (paper Fig. 2): max >> median."""
+        rng = np.random.default_rng(0)
+        totals = []
+        for i in range(400):
+            t = P.synth_trajectory(rng, P._DOMAINS[i % 3])
+            totals.append(sum(s["tokens"] for s in t["steps"]))
+        totals = np.array(totals)
+        assert totals.max() > 4 * np.median(totals)
+
+    def test_prefix_features_monotone_tokens(self):
+        rng = np.random.default_rng(1)
+        t = P.synth_trajectory(rng, "coding")
+        toks = [P.features_from_prefix(t, k)[2] for k in
+                range(len(t["steps"]) + 1)]
+        assert all(a <= b + 1e-6 for a, b in zip(toks, toks[1:]))
+
+
+class TestTraining:
+    def test_loss_beats_constant_baseline(self, trained):
+        params, loss = trained
+        _, y = P.build_dataset(seed=7)
+        var = float(np.var(y))
+        assert loss < 0.9 * var, f"mse {loss} vs target var {var}"
+
+    def test_progressive_improvement(self, trained):
+        """Error at step-2 context < error at step-0 (prompt-only) context —
+        the core claim behind progressive priority scheduling."""
+        params, _ = trained
+        rng = np.random.default_rng(99)
+        errs = {0: [], 1: [], 2: []}
+        for i in range(600):
+            t = P.synth_trajectory(rng, P._DOMAINS[i % 3])
+            total = sum(s["tokens"] for s in t["steps"])
+            seen = 0
+            for k in sorted(errs):
+                if k >= len(t["steps"]):
+                    continue
+                f = P.features_from_prefix(t, k)
+                pred = float(
+                    P.predictor_apply(params, f[None, :])[0, 0]
+                )
+                true = np.log1p(total - seen)
+                errs[k].append(abs(pred - true))
+                if k < len(t["steps"]):
+                    seen += t["steps"][k]["tokens"]
+                seen = sum(s["tokens"] for s in t["steps"][: k + 1])
+        mae = {k: np.mean(v) for k, v in errs.items()}
+        assert mae[2] < mae[0], f"progressive property violated: {mae}"
+
+    def test_flatten_roundtrip(self, trained):
+        params, _ = trained
+        flat = P.flatten_predictor(params)
+        assert len(flat) == len(P.PRED_ORDER)
+        out = P.predictor_apply_flat(flat, np.zeros((1, P.N_FEATURES),
+                                                    np.float32))
+        assert out[0].shape == (1, 1)
+
+
+class TestApply:
+    def test_batched_equals_rowwise(self):
+        params = P.init_predictor(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(8, P.N_FEATURES)).astype(np.float32)
+        full = np.asarray(P.predictor_apply(params, x))
+        rows = np.concatenate(
+            [np.asarray(P.predictor_apply(params, x[i : i + 1]))
+             for i in range(8)]
+        )
+        np.testing.assert_allclose(full, rows, atol=1e-6)

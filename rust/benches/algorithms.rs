@@ -1,0 +1,165 @@
+//! Control-plane algorithm microbenchmarks (paper Table 2 + §Perf):
+//! presorted DP, sort-initialized SA, scheduler queue ops, router
+//! dispatch, transmission scheduling, and predictor latency.
+//!
+//! `cargo bench --bench algorithms` (harness = false; see Cargo.toml).
+
+use heddle::config::{ClusterConfig, ModelCost, PlacementKind, SchedulerKind};
+use heddle::coordinator::migration::{MigrationRequest, TransmissionScheduler};
+use heddle::coordinator::placement::{
+    build_items, presorted_dp, presorted_dp_naive, GroupCostModel,
+};
+use heddle::coordinator::resource::{sort_initialized_sa, SaParams};
+use heddle::coordinator::router::Router;
+use heddle::coordinator::scheduler::{SchedulerQueue, StepRequest};
+use heddle::predictor::{build_predictor, history_workload, Observation};
+use heddle::config::PredictorKind;
+use heddle::util::bench::bench;
+use heddle::util::rng::Rng;
+use heddle::util::stats;
+use heddle::workload::{generate, Domain, WorkloadConfig};
+
+fn main() {
+    let model = ModelCost::qwen3_14b();
+    // Paper-pure cost (monotone group term -> binary-search DP
+    // transitions) and the control-plane cost (work-conservation term ->
+    // exhaustive transitions) are benched separately.
+    let cost = GroupCostModel::with_capacity(
+        heddle::coordinator::placement::InterferenceModel::from_model(&model),
+        100,
+    );
+    let cost_work = GroupCostModel::from_model(&model, 100);
+
+    // --- Placement DP (Table 2: n=6400, m=16 -> paper reports ~37 ms) ---
+    let mut wl = WorkloadConfig::new(Domain::Coding, 400, 1);
+    wl.group_size = 16;
+    let specs = generate(&wl);
+    let preds: Vec<(usize, f64)> =
+        specs.iter().map(|t| (t.id, t.total_tokens() as f64)).collect();
+    let times = vec![model.base_time_at_mp(1); 16];
+
+    let items_exact = build_items(&preds, 0.0, 1);
+    bench("dp n=6400 m=16 exact (paper cost, bsearch)", 2, 10, || {
+        presorted_dp(&items_exact, &times, &cost).makespan
+    });
+    let lens: Vec<f64> = preds.iter().map(|p| p.1).collect();
+    let thresh = stats::percentile(&lens, 0.5);
+    let items_agg = build_items(&preds, thresh, 16);
+    let agg75 = build_items(&preds, stats::percentile(&lens, 0.75), 64);
+    bench(
+        &format!("dp n=6400->agg{} m=16 (work-term, exh.)", items_agg.len()),
+        0,
+        2,
+        || presorted_dp(&items_agg, &times, &cost_work).makespan,
+    );
+    bench(
+        &format!("dp n=6400->agg{} m=16 (work-term, SA path)", agg75.len()),
+        0,
+        3,
+        || presorted_dp(&agg75, &times, &cost_work).makespan,
+    );
+    // Binary-search vs naive transitions on the same (paper) cost.
+    let small: Vec<(usize, f64)> = preds[..640].to_vec();
+    let items_small = build_items(&small, 0.0, 1);
+    bench("dp n=640 m=16 paper cost (binary-search)", 2, 20, || {
+        presorted_dp(&items_small, &times, &cost).makespan
+    });
+    bench("dp n=640 m=16 paper cost naive (O(n^2 m))", 1, 5, || {
+        presorted_dp_naive(&items_small, &times, &cost)
+    });
+
+    // --- Resource manager SA (Table 2: paper reports ~5 s) -------------
+    let cluster = ClusterConfig { n_gpus: 64, ..Default::default() };
+    // Paper cost (binary-search DP inside the SA loop) — the Table-2
+    // configuration; the work-term variant is exercised end-to-end by
+    // the control plane in the figure benches.
+    bench("sort_initialized_sa 64gpu (SA-path items)", 0, 3, || {
+        sort_initialized_sa(
+            &agg75,
+            &model,
+            &cluster,
+            &cost,
+            SaParams::default(),
+            7,
+        )
+        .makespan
+    });
+
+    // --- Scheduler queue (hot path: one push+pop per agentic step) -----
+    let mut rng = Rng::new(3);
+    let reqs: Vec<StepRequest> = (0..10_000)
+        .map(|i| StepRequest {
+            traj_id: i,
+            predicted_len: rng.lognormal(6.0, 1.0),
+            seq: i as u64,
+            first_seq: i as u64,
+        })
+        .collect();
+    bench("scheduler push+drain 10k (pps)", 2, 20, || {
+        let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+        for r in &reqs {
+            q.push(*r);
+        }
+        let mut n = 0;
+        while q.pop().is_some() {
+            n += 1;
+        }
+        n
+    });
+
+    // --- Router dispatch ------------------------------------------------
+    bench("router route_step 10k (least-load)", 2, 20, || {
+        let mut r = Router::new(PlacementKind::LeastLoad, 64);
+        let mut acc = 0usize;
+        for i in 0..10_000usize {
+            let (w, _) = r.route_step(i % 1000);
+            r.on_enter(w);
+            acc += w;
+            if i % 3 == 0 {
+                r.on_leave(w);
+            }
+        }
+        acc
+    });
+
+    // --- Transmission scheduler ------------------------------------------
+    bench("transmission schedule 1k requests", 2, 20, || {
+        let mut ts = TransmissionScheduler::new();
+        let mut rng = Rng::new(5);
+        for id in 0..1000 {
+            let src = rng.usize(64);
+            let dst = (src + 1 + rng.usize(62)) % 64;
+            ts.submit(MigrationRequest {
+                traj_id: id,
+                src_worker: src,
+                dst_worker: dst,
+                bytes: 1e8,
+                predicted_len: rng.lognormal(6.0, 1.0),
+            });
+        }
+        let mut done = 0;
+        loop {
+            let batch = ts.next_batch();
+            if batch.is_empty() {
+                break;
+            }
+            done += batch.len();
+            for r in &batch {
+                ts.complete(r);
+            }
+        }
+        done
+    });
+
+    // --- Predictor latency (Table 1's "Pred." row) ----------------------
+    let hist = history_workload(Domain::Coding, 1);
+    let mut pred = build_predictor(PredictorKind::Progressive, &hist);
+    let test = generate(&WorkloadConfig::new(Domain::Coding, 10, 2));
+    bench("progressive predict x160", 2, 20, || {
+        let mut acc = 0.0;
+        for t in &test {
+            acc += pred.predict_total(&Observation::new(t, 1));
+        }
+        acc
+    });
+}

@@ -1,0 +1,35 @@
+//! Fig. 12 end-to-end bench: rollout throughput of Heddle vs Verl /
+//! Verl* / Slime across all three domains and model sizes, at the scaled
+//! testbed (`--gpus`/`--prompts` env knobs HEDDLE_GPUS / HEDDLE_PROMPTS).
+//!
+//! `cargo bench --bench e2e_throughput`
+
+use heddle::config::ModelCost;
+use heddle::figures as figs;
+use heddle::util::bench::bench;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let p = figs::FigParams {
+        gpus: env_usize("HEDDLE_GPUS", 16),
+        prompts: env_usize("HEDDLE_PROMPTS", 100),
+        seed: 1,
+    };
+    println!(
+        "== Fig.12 e2e rollout throughput @ gpus={} prompts={} ==",
+        p.gpus, p.prompts
+    );
+    // 8B and 14B per bench run; 32B included when FULL=1 (it is the
+    // slowest row set).
+    let mut models = vec![ModelCost::qwen3_8b(), ModelCost::qwen3_14b()];
+    if std::env::var("FULL").is_ok() {
+        models.push(ModelCost::qwen3_32b());
+    }
+    let rows = bench("fig12 matrix", 0, 1, || figs::fig12(&p, &models));
+    let _ = rows;
+    figs::print_fig12(&figs::fig12(&p, &models));
+    println!("(set FULL=1 to include qwen3-32b; paper reports 1.1x-2.5x)");
+}

@@ -1,0 +1,90 @@
+//! Figure/table regeneration bench: reruns every evaluation artifact
+//! (Fig. 2, 4, 5, 6, 7, 13, 14, 15, 16; Tables 1, 2) at the scaled
+//! testbed and reports both the *results* (paper-style rows) and the
+//! harness runtimes. Fig. 12 has its own bench (e2e_throughput).
+//!
+//! `cargo bench --bench figures`
+
+use heddle::figures as figs;
+use heddle::util::bench::bench;
+use heddle::workload::Domain;
+
+fn main() {
+    let p = figs::FigParams::default();
+    println!("== figure harness @ gpus={} prompts={} seed={} ==\n",
+             p.gpus, p.prompts, p.seed);
+
+    bench("fig2 (workload CDFs, 3 domains)", 0, 3, || {
+        Domain::ALL.map(|d| figs::fig2(d, &p).token_p99)
+    });
+    for d in Domain::ALL {
+        let f = figs::fig2(d, &p);
+        println!(
+            "  Fig.2 {:7} tokens p50={:6.0} p99={:6.0} ({:4.1}x) | tool p50={:5.2}s p99={:5.2}s",
+            d.name(), f.token_p50, f.token_p99, f.token_p99 / f.token_p50,
+            f.tool_p50, f.tool_p99
+        );
+    }
+    println!();
+
+    bench("fig4 (completion-time CDF)", 0, 2, || figs::fig4(&p).max_over_median);
+    let f4 = figs::fig4(&p);
+    println!("  Fig.4 max/median completion = {:.2}x (paper: >4x)\n",
+             f4.max_over_median);
+
+    bench("fig5 (intra-group divergence)", 0, 3, || {
+        figs::fig5(&p).mean_max_over_min
+    });
+    let f5 = figs::fig5(&p);
+    println!("  Fig.5 mean intra-group max/min = {:.1}x\n", f5.mean_max_over_min);
+
+    bench("fig6 (interference curves)", 0, 10, || figs::fig6().rows.len());
+    for (m, pts) in &figs::fig6().rows {
+        let last = pts.last().unwrap();
+        println!("  Fig.6 {m}: per-token {:.1}ms@b=1 -> {:.1}ms@b=100 (F={:.2})",
+                 pts[0].1 * 1e3, last.1 * 1e3, last.2);
+    }
+    println!();
+
+    bench("fig7 (MP allocation tradeoff)", 0, 10, || figs::fig7(8).rows.len());
+    for (label, lat, tp) in &figs::fig7(8).rows {
+        println!("  Fig.7 {label}: {:.1} ms/token | {:.0} tok/s aggregate",
+                 lat * 1e3, tp);
+    }
+    println!();
+
+    bench("fig13 (predictor precision)", 0, 2, || figs::fig13(&p).len());
+    figs::print_fig13(&figs::fig13(&p));
+    println!();
+
+    bench("fig14 (scheduler ablation)", 0, 1, || figs::fig14(&p).len());
+    figs::print_fig14(&figs::fig14(&p));
+    println!();
+
+    bench("fig15 (placement ablation)", 0, 1, || figs::fig15(&p).len());
+    figs::print_fig15(&figs::fig15(&p));
+    println!();
+
+    bench("fig16 (resource ablation)", 0, 1, || figs::fig16(&p).rows.len());
+    figs::print_fig16(&figs::fig16(&p));
+    println!();
+
+    bench("table1 (data-plane overheads)", 0, 1, || figs::table1(&p).len());
+    figs::print_table1(&figs::table1(&p));
+    println!();
+
+    // Table 2 at the paper's exact scale: n=6400, m=16.
+    bench("table2 (n=6400 m=16 algorithms)", 0, 1, || {
+        figs::table2(6400, 16, p.seed).len()
+    });
+    figs::print_table2(&figs::table2(6400, 16, p.seed));
+    println!();
+
+    println!("== design-choice ablations (DESIGN.md §8) ==");
+    for r in figs::ablation_aggregation(6400, 16, p.seed) {
+        println!("  {:28} {:10.3} {}", r.name, r.value, r.unit);
+    }
+    for r in figs::ablation_sa_quality(p.seed) {
+        println!("  {:28} {:10.3} {}", r.name, r.value, r.unit);
+    }
+}

@@ -1,0 +1,87 @@
+//! Real PJRT hot-path bench (§Perf L3/L1): decode step across batch
+//! buckets, chunked prefill, HLO predictor, KV gather/scatter overhead,
+//! and a miniature end-to-end serve run. Requires `make artifacts`.
+//!
+//! `cargo bench --bench runtime_hotpath`
+
+use heddle::config::PolicyConfig;
+use heddle::predictor::history_workload;
+use heddle::runtime::Engine;
+use heddle::serve::{serve_rollout, ServeConfig};
+use heddle::util::bench::bench;
+use heddle::workload::{generate, Domain, WorkloadConfig};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts/ missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let engine = Engine::load(dir)?;
+    println!(
+        "== runtime hot path (MiniQwen ~{:.1}M params, PJRT CPU) ==",
+        engine.manifest.model.n_params() as f64 / 1e6
+    );
+
+    // Decode at every compiled bucket: the per-token hot path.
+    for &b in &engine.manifest.decode_batches() {
+        let mut kvs: Vec<_> = (0..b).map(|_| engine.new_kv()).collect();
+        for kv in &mut kvs {
+            engine.extend(kv, &[2, 3, 4, 5, 6, 7, 8, 9])?;
+        }
+        let mut step = 0i32;
+        bench(&format!("decode_step b={b}"), 3, 15, || {
+            step = (step + 1) % 100;
+            let mut entries: Vec<(i32, &mut _)> =
+                kvs.iter_mut().map(|kv| (step + 2, kv)).collect();
+            engine.decode_step(&mut entries).unwrap().logits[0]
+        });
+        // Reset ring before it overflows on the next bucket.
+    }
+
+    // Chunked prefill (prompt ingestion).
+    for chunk in [16usize, 64, 120] {
+        let toks: Vec<i32> = (2..2 + chunk as i32).collect();
+        bench(&format!("extend {chunk} tokens"), 2, 10, || {
+            let mut kv = engine.new_kv();
+            engine.extend(&mut kv, &toks).unwrap().len()
+        });
+    }
+
+    // HLO predictor microservice call.
+    let feats = vec![0.25f32; 16];
+    bench("hlo predictor b=1", 3, 30, || {
+        engine.predict(&feats).unwrap()[0]
+    });
+
+    // Interference profile on the real path (feeds the DP cost model).
+    let prof = heddle::runtime::profiler::profile_decode(&engine, 8, 2)?;
+    println!("\nreal-path interference profile:");
+    for (b, t, f) in prof.rows() {
+        println!("  batch {b}: {:.2} ms/token (F = {f:.2})", t * 1e3);
+    }
+
+    // Miniature end-to-end serve (Heddle policy, real tokens).
+    let mut wl = WorkloadConfig::new(Domain::Math, 2, 3);
+    wl.group_size = 4;
+    let specs = generate(&wl);
+    let history = history_workload(Domain::Math, 3);
+    let cfg = ServeConfig {
+        n_workers: 2,
+        max_batch: 4,
+        policy: PolicyConfig::heddle(),
+        seed: 3,
+        ..Default::default()
+    };
+    let out = serve_rollout(&engine, &cfg, &history, &specs)?;
+    println!(
+        "\nserve mini-run: {} trajectories, {} tokens in {:.2}s \
+         ({:.0} tok/s end-to-end)",
+        out.report.trajectories.len(),
+        out.tokens_generated,
+        out.wall_seconds,
+        out.throughput()
+    );
+    Ok(())
+}

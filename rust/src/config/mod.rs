@@ -1,0 +1,528 @@
+//! Configuration system: typed configs, JSON file loading, and the model
+//! cost presets used by the cluster simulator.
+//!
+//! The paper's testbed (64 Hopper GPUs, Qwen3-8B/14B/32B) is reproduced
+//! through *cost models* (DESIGN.md §1): per-token base time as a function
+//! of model parallelism, an interference function F(batch), and prefill
+//! rates. The constants are calibrated so the qualitative relationships
+//! the paper relies on hold: larger models ⇒ higher contention ⇒ larger
+//! interference factor; higher MP ⇒ lower per-token latency at sub-linear
+//! efficiency (Fig. 7); batch growth inflates per-token time (Fig. 6).
+
+use crate::util::json::{Json, JsonError};
+use std::path::Path;
+
+/// Which scheduler the control plane runs (§4.2 + baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Heddle: progressive priority scheduling (Algorithm 1).
+    Pps,
+    /// First-come-first-served over step requests.
+    Fcfs,
+    /// Round-robin requeue per step — the Verl/Slime default.
+    RoundRobin,
+    /// Shortest-job-first on predicted length (Autellix-style).
+    Sjf,
+}
+
+/// Placement policy (§5 + baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Heddle: presorted dynamic programming + opportunistic migration.
+    PresortedDp,
+    /// Route each step to the least-loaded worker above a skew threshold,
+    /// else longest-prefix worker (Slime router).
+    LeastLoad,
+    /// Pin each trajectory to the worker with max prefix match (Verl).
+    CacheAware,
+    /// Verl*: least-load when load skew (max/min) exceeds a threshold,
+    /// cache-aware otherwise.
+    Hybrid,
+}
+
+/// Resource allocation policy (§6 + baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResourceKind {
+    /// Heddle: sort-initialized simulated annealing (Algorithm 2).
+    Adaptive,
+    /// Homogeneous MP degree k on every worker.
+    Fixed(usize),
+}
+
+/// Length predictor used by scheduling/placement (§4.1 + Fig. 13 baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictorKind {
+    /// Heddle: progressive (prompt + runtime context), refined per step.
+    Progressive,
+    /// Static prompt-only learned model.
+    PromptModel,
+    /// Static per-prompt historical statistics.
+    History,
+    /// Oracle (upper bound, used in ablations only).
+    Oracle,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "pps" | "heddle" => SchedulerKind::Pps,
+            "fcfs" => SchedulerKind::Fcfs,
+            "rr" | "round-robin" => SchedulerKind::RoundRobin,
+            "sjf" | "autellix" => SchedulerKind::Sjf,
+            _ => return None,
+        })
+    }
+}
+
+impl PlacementKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "dp" | "presorted-dp" | "heddle" => PlacementKind::PresortedDp,
+            "least-load" | "slime" => PlacementKind::LeastLoad,
+            "cache-aware" | "verl" => PlacementKind::CacheAware,
+            "hybrid" | "verl-star" | "verl*" => PlacementKind::Hybrid,
+            _ => return None,
+        })
+    }
+}
+
+impl ResourceKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        if let Some(k) = s.strip_prefix("fixed-") {
+            return k.parse().ok().map(ResourceKind::Fixed);
+        }
+        match s {
+            "adaptive" | "heddle" | "sa" => Some(ResourceKind::Adaptive),
+            _ => None,
+        }
+    }
+}
+
+impl PredictorKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "progressive" | "heddle" => PredictorKind::Progressive,
+            "prompt-model" | "model" => PredictorKind::PromptModel,
+            "history" => PredictorKind::History,
+            "oracle" => PredictorKind::Oracle,
+            _ => return None,
+        })
+    }
+}
+
+/// Cost model of one LLM on the simulated cluster.
+#[derive(Debug, Clone)]
+pub struct ModelCost {
+    pub name: String,
+    /// Billions of parameters (documentation only).
+    pub params_b: f64,
+    /// Contention-free per-token decode time at MP=1, batch=1 (seconds).
+    /// For models that cannot fit one GPU this is the *extrapolated*
+    /// MP=1 value; `min_mp` gates what allocations are valid.
+    pub base_token_time: f64,
+    /// Minimum model-parallel degree that fits GPU memory.
+    pub min_mp: usize,
+    /// Communication-overhead fraction per extra MP shard: the per-token
+    /// time at MP=n is `base * (1/n + comm_overhead * (n-1)/n)` — sub-
+    /// linear speedup, matching the paper's Fig. 7 latency/throughput
+    /// trade-off.
+    pub comm_overhead: f64,
+    /// Interference: per-token time multiplier at batch B is
+    /// `1 + gamma * (B^interf_pow) / 10` (monotone in B, the §5.1
+    /// premise). Larger models get larger gamma (paper §7.1: gains
+    /// amplify with model size).
+    pub interf_gamma: f64,
+    pub interf_pow: f64,
+    /// Prefill cost per prompt token relative to a decode token.
+    pub prefill_factor: f64,
+    /// KV cache bytes per token (for migration volume modelling).
+    pub kv_bytes_per_token: f64,
+    /// Per-GPU batch at which decode becomes throughput-bound.
+    pub sat_batch: f64,
+    /// Worker saturated throughput scales as mp^exp (exp < 1): per-GPU
+    /// saturated throughput *decreases* with MP — the other half of the
+    /// Fig. 7 trade-off. 0.7 matches typical tensor-parallel efficiency
+    /// curves (e.g. 8-way TP at ~54% per-GPU efficiency).
+    pub mp_thpt_exp: f64,
+}
+
+impl ModelCost {
+    /// Per-token decode time (seconds) at MP degree `mp`, batch size `b`.
+    ///
+    /// Explicit max of the two regimes:
+    ///  * latency-bound: the MP-sped base time inflated by per-GPU memory
+    ///    contention F(b/mp);
+    ///  * throughput-bound: the worker's saturated service rate
+    ///    `sat_batch / (T1 · F(sat_batch)) · mp^exp` tokens/s (exp < 1):
+    ///    higher MP buys latency, not per-GPU throughput. The regimes
+    ///    meet exactly at per-GPU batch = sat_batch for MP 1.
+    pub fn token_time(&self, mp: usize, batch: usize) -> f64 {
+        let b = batch.max(1);
+        let mp = mp.max(1);
+        let per_gpu = (b + mp - 1) / mp;
+        let lat = self.base_time_at_mp(mp) * self.interference(per_gpu);
+        let sat_rate_1 = self.sat_batch
+            / (self.base_token_time * self.interference(self.sat_batch as usize));
+        let thr = b as f64 / (sat_rate_1 * (mp as f64).powf(self.mp_thpt_exp));
+        lat.max(thr)
+    }
+
+    /// Contention-free per-token time at MP degree `mp` (batch = 1).
+    pub fn base_time_at_mp(&self, mp: usize) -> f64 {
+        let n = mp.max(1) as f64;
+        self.base_token_time * (1.0 / n + self.comm_overhead * (n - 1.0) / n)
+    }
+
+    /// Interference factor F(batch) — monotone increasing, F(1) = 1.
+    pub fn interference(&self, batch: usize) -> f64 {
+        if batch <= 1 {
+            return 1.0;
+        }
+        1.0 + self.interf_gamma * (batch as f64).powf(self.interf_pow) / 10.0
+    }
+
+    /// Seconds to prefill `tokens` prompt tokens at MP `mp` (batched).
+    pub fn prefill_time(&self, mp: usize, tokens: usize) -> f64 {
+        self.base_time_at_mp(mp) * self.prefill_factor * tokens as f64
+    }
+
+    pub fn qwen3_8b() -> Self {
+        ModelCost {
+            name: "qwen3-8b".into(),
+            params_b: 8.0,
+            base_token_time: 0.025,
+            min_mp: 1,
+            comm_overhead: 0.28,
+            interf_gamma: 0.15,
+            interf_pow: 0.85,
+            prefill_factor: 0.012,
+            kv_bytes_per_token: 131072.0, // 36 layers * 8 kv heads * 128 dim * 2 (k+v) * 2B ≈ 128 KiB
+            sat_batch: 128.0,
+            mp_thpt_exp: 0.6,
+        }
+    }
+
+    pub fn qwen3_14b() -> Self {
+        ModelCost {
+            name: "qwen3-14b".into(),
+            params_b: 14.0,
+            base_token_time: 0.040,
+            min_mp: 1,
+            comm_overhead: 0.28,
+            interf_gamma: 0.22,
+            interf_pow: 0.85,
+            prefill_factor: 0.012,
+            kv_bytes_per_token: 196608.0,
+            sat_batch: 112.0,
+            mp_thpt_exp: 0.6,
+        }
+    }
+
+    pub fn qwen3_32b() -> Self {
+        ModelCost {
+            name: "qwen3-32b".into(),
+            params_b: 32.0,
+            base_token_time: 0.085,
+            min_mp: 2,
+            comm_overhead: 0.28,
+            interf_gamma: 0.35,
+            interf_pow: 0.85,
+            prefill_factor: 0.012,
+            kv_bytes_per_token: 262144.0,
+            sat_batch: 96.0,
+            mp_thpt_exp: 0.6,
+        }
+    }
+
+    /// The real MiniQwen model (per-token times are filled in by the
+    /// runtime profiler; these are placeholders for sim-only runs).
+    pub fn mini() -> Self {
+        ModelCost {
+            name: "mini".into(),
+            params_b: 0.0035,
+            base_token_time: 0.002,
+            min_mp: 1,
+            comm_overhead: 0.28,
+            interf_gamma: 0.10,
+            interf_pow: 0.85,
+            prefill_factor: 0.05,
+            kv_bytes_per_token: 4.0 * 2.0 * 2.0 * 256.0 * 32.0 / 256.0, // per-token share
+            sat_batch: 16.0,
+            mp_thpt_exp: 0.6,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "qwen3-8b" | "8b" => Self::qwen3_8b(),
+            "qwen3-14b" | "14b" => Self::qwen3_14b(),
+            "qwen3-32b" | "32b" => Self::qwen3_32b(),
+            "mini" => Self::mini(),
+            _ => return None,
+        })
+    }
+}
+
+/// Cluster shape for the simulator.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Total GPU budget N (paper testbed: 64).
+    pub n_gpus: usize,
+    /// Valid model-parallel degrees 𝒟 for workers.
+    pub mp_degrees: Vec<usize>,
+    /// Max concurrently-running trajectories per worker (running batch).
+    pub max_batch_per_worker: usize,
+    /// Intra-node NVLink-class bandwidth for KV migration (bytes/s).
+    pub migration_bandwidth: f64,
+    /// Per-migration fixed latency (handshake, registration) seconds.
+    pub migration_latency: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_gpus: 64,
+            mp_degrees: vec![1, 2, 4, 8],
+            max_batch_per_worker: 100,
+            migration_bandwidth: 50e9, // GPUDirect RDMA-class
+            migration_latency: 0.010,
+        }
+    }
+}
+
+/// Policy bundle — which of the paper's mechanisms (or baselines) run.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyConfig {
+    pub scheduler: SchedulerKind,
+    pub placement: PlacementKind,
+    pub resource: ResourceKind,
+    pub predictor: PredictorKind,
+    /// Enable opportunistic runtime migration (§5.3).
+    pub migration: bool,
+    /// Enable preemptive execution (§4.2).
+    pub preemption: bool,
+}
+
+impl PolicyConfig {
+    /// Full Heddle.
+    pub fn heddle() -> Self {
+        PolicyConfig {
+            scheduler: SchedulerKind::Pps,
+            placement: PlacementKind::PresortedDp,
+            resource: ResourceKind::Adaptive,
+            predictor: PredictorKind::Progressive,
+            migration: true,
+            preemption: true,
+        }
+    }
+
+    /// Verl-like baseline: RR scheduling + cache-aware pinning + fixed MP.
+    pub fn verl(mp: usize) -> Self {
+        PolicyConfig {
+            scheduler: SchedulerKind::RoundRobin,
+            placement: PlacementKind::CacheAware,
+            resource: ResourceKind::Fixed(mp),
+            predictor: PredictorKind::History,
+            migration: false,
+            preemption: false,
+        }
+    }
+
+    /// Verl* baseline: hybrid skew-threshold router.
+    pub fn verl_star(mp: usize) -> Self {
+        PolicyConfig {
+            placement: PlacementKind::Hybrid,
+            ..Self::verl(mp)
+        }
+    }
+
+    /// Slime-like baseline: RR scheduling + least-load router + fixed MP.
+    pub fn slime(mp: usize) -> Self {
+        PolicyConfig {
+            scheduler: SchedulerKind::RoundRobin,
+            placement: PlacementKind::LeastLoad,
+            resource: ResourceKind::Fixed(mp),
+            predictor: PredictorKind::History,
+            migration: false,
+            preemption: false,
+        }
+    }
+
+    pub fn by_name(name: &str, mp: usize) -> Option<Self> {
+        Some(match name {
+            "heddle" => Self::heddle(),
+            "verl" => Self::verl(mp),
+            "verl*" | "verl-star" => Self::verl_star(mp),
+            "slime" => Self::slime(mp),
+            _ => return None,
+        })
+    }
+}
+
+/// Top-level simulation / serving configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub cluster: ClusterConfig,
+    pub model: ModelCost,
+    pub policy: PolicyConfig,
+    pub seed: u64,
+    /// Re-run the resource manager every k rollout batches (§7.5:
+    /// "executes only periodically").
+    pub resource_period: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            cluster: ClusterConfig::default(),
+            model: ModelCost::qwen3_14b(),
+            policy: PolicyConfig::heddle(),
+            seed: 0,
+            resource_period: 4,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Load overrides from a JSON config file; unknown keys are rejected
+    /// to catch typos.
+    pub fn from_json_file(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text)?;
+        Self::from_json(&v).map_err(Into::into)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, JsonError> {
+        let mut cfg = SimConfig::default();
+        for (key, val) in v.as_obj()? {
+            match key.as_str() {
+                "model" => {
+                    let name = val.as_str()?;
+                    cfg.model = ModelCost::by_name(name)
+                        .ok_or_else(|| JsonError::Missing(format!("model {name}")))?;
+                }
+                "policy" => {
+                    let name = val.as_str()?;
+                    cfg.policy = PolicyConfig::by_name(name, 1)
+                        .ok_or_else(|| JsonError::Missing(format!("policy {name}")))?;
+                }
+                "seed" => cfg.seed = val.as_i64()? as u64,
+                "n_gpus" => cfg.cluster.n_gpus = val.as_usize()?,
+                "max_batch_per_worker" => {
+                    cfg.cluster.max_batch_per_worker = val.as_usize()?
+                }
+                "resource_period" => cfg.resource_period = val.as_usize()?,
+                "mp_degrees" => {
+                    cfg.cluster.mp_degrees = val
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<_, _>>()?;
+                }
+                other => {
+                    return Err(JsonError::Missing(format!(
+                        "unknown config key: {other}"
+                    )))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interference_monotone_in_batch() {
+        let m = ModelCost::qwen3_14b();
+        let mut prev = 0.0;
+        for b in 1..=128 {
+            let f = m.interference(b);
+            assert!(f >= prev, "F must be monotone: F({b})={f} < {prev}");
+            prev = f;
+        }
+        assert_eq!(m.interference(1), 1.0);
+    }
+
+    #[test]
+    fn interference_grows_with_model_size() {
+        for b in [8, 32, 100] {
+            let f8 = ModelCost::qwen3_8b().interference(b);
+            let f14 = ModelCost::qwen3_14b().interference(b);
+            let f32 = ModelCost::qwen3_32b().interference(b);
+            assert!(f8 < f14 && f14 < f32, "b={b}: {f8} {f14} {f32}");
+        }
+    }
+
+    #[test]
+    fn mp_speedup_sublinear() {
+        let m = ModelCost::qwen3_14b();
+        let t1 = m.base_time_at_mp(1);
+        let t2 = m.base_time_at_mp(2);
+        let t8 = m.base_time_at_mp(8);
+        assert!(t2 < t1 && t8 < t2, "higher MP must be faster");
+        // Sub-linear: 8 GPUs give less than 8x.
+        assert!(t8 > t1 / 8.0, "speedup must be sub-linear");
+    }
+
+    #[test]
+    fn latency_throughput_tradeoff_fig7() {
+        // Aggregate throughput of N GPUs as m workers of MP = N/m:
+        // lower MP (more workers) must win on throughput; higher MP must
+        // win on per-token latency — the Fig. 7 trade-off.
+        let m = ModelCost::qwen3_14b();
+        let n = 8;
+        let thpt = |mp: usize| {
+            let workers = n / mp;
+            workers as f64 / m.base_time_at_mp(mp)
+        };
+        assert!(thpt(1) > thpt(8));
+        assert!(m.base_time_at_mp(8) < m.base_time_at_mp(1));
+    }
+
+    #[test]
+    fn config_from_json() {
+        let j = Json::parse(
+            r#"{"model":"qwen3-32b","policy":"slime","seed":9,"n_gpus":16}"#,
+        )
+        .unwrap();
+        let cfg = SimConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.model.name, "qwen3-32b");
+        assert_eq!(cfg.cluster.n_gpus, 16);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.policy.placement, PlacementKind::LeastLoad);
+    }
+
+    #[test]
+    fn config_rejects_unknown_key() {
+        let j = Json::parse(r#"{"modle":"qwen3-8b"}"#).unwrap();
+        assert!(SimConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn policy_presets() {
+        assert!(PolicyConfig::heddle().migration);
+        assert!(!PolicyConfig::verl(2).preemption);
+        assert_eq!(
+            PolicyConfig::slime(1).placement,
+            PlacementKind::LeastLoad
+        );
+        assert_eq!(
+            PolicyConfig::verl_star(1).placement,
+            PlacementKind::Hybrid
+        );
+    }
+
+    #[test]
+    fn kind_parsers() {
+        assert_eq!(SchedulerKind::parse("pps"), Some(SchedulerKind::Pps));
+        assert_eq!(
+            ResourceKind::parse("fixed-8"),
+            Some(ResourceKind::Fixed(8))
+        );
+        assert_eq!(ResourceKind::parse("sa"), Some(ResourceKind::Adaptive));
+        assert!(PlacementKind::parse("nope").is_none());
+    }
+}

@@ -1,0 +1,379 @@
+//! The control plane (paper §3): glues the trajectory-level scheduler,
+//! trajectory-aware placement, migration planner, and resource manager
+//! into the decision engine the data plane (simulator or real serving
+//! path) consults.
+
+use super::migration::{MigrationPlanner, MigrationRequest, TransmissionScheduler};
+use super::placement::{build_items, presorted_dp_workers, GroupCostModel, InterferenceModel, Partition, WorkerParams};
+use super::resource::{evaluate, fixed_allocation, sort_initialized_sa, Allocation, SaParams};
+use super::router::Router;
+use crate::config::{PlacementKind, PolicyConfig, ResourceKind, SimConfig};
+use crate::predictor::{build_predictor, Observation, Predictor};
+use crate::workload::TrajectorySpec;
+
+/// Aggregation heuristic parameters for the placement DP (§5.2): short
+/// trajectories below the median predicted length are coalesced in runs
+/// of `AGG_CHUNK`.
+pub const AGG_CHUNK: usize = 16;
+
+pub struct ControlPlane {
+    pub policy: PolicyConfig,
+    pub predictor: Box<dyn Predictor>,
+    pub interference: InterferenceModel,
+    pub cost_model: GroupCostModel,
+    pub allocation: Allocation,
+    pub router: Router,
+    pub planner: Option<MigrationPlanner>,
+    pub transmissions: TransmissionScheduler,
+    /// Prediction at each trajectory's last migration decision (debounce).
+    last_migration_pred: std::collections::HashMap<usize, f64>,
+    cfg: SimConfig,
+}
+
+impl ControlPlane {
+    /// Build the control plane for one rollout batch: provision resources
+    /// (§6), compute the initial placement (§5.2), and install it in the
+    /// router.
+    pub fn new(
+        cfg: &SimConfig,
+        history: &[TrajectorySpec],
+        specs: &[TrajectorySpec],
+    ) -> Self {
+        let mut predictor = build_predictor(cfg.policy.predictor, history);
+        let interference = InterferenceModel::from_model(&cfg.model);
+        // Duty cycle: share of a trajectory's life spent decoding rather
+        // than tool-parked, estimated from history at the base MP degree.
+        let duty = if history.is_empty() {
+            1.0
+        } else {
+            let t1 = cfg.model.base_time_at_mp(cfg.model.min_mp);
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for t in history {
+                let gen = t.total_tokens() as f64 * t1;
+                num += gen;
+                den += gen + t.tool_time();
+            }
+            (num / den.max(1e-9)).clamp(0.05, 1.0)
+        };
+        let cost_model = GroupCostModel::from_model(
+            &cfg.model,
+            cfg.cluster.max_batch_per_worker,
+        )
+        .with_duty(duty);
+
+        // Provisioning (§6) runs periodically and therefore optimizes for
+        // the *length profile* of the workload, which history reveals
+        // even though per-trajectory identities are unknown: resample the
+        // historical totals to this batch's size. Prompt-only predictions
+        // are too weak to expose the tail (the paper's own Fig. 13
+        // argument) — provisioning on them would never allocate high-MP
+        // workers.
+        let profile_items = {
+            let mut totals: Vec<f64> = if history.is_empty() {
+                specs
+                    .iter()
+                    .map(|t| {
+                        predictor.predict_total(&Observation::new(t, 0))
+                    })
+                    .collect()
+            } else {
+                history.iter().map(|t| t.total_tokens() as f64).collect()
+            };
+            totals.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            // Quantile-resample to the batch size.
+            let n = specs.len().max(1);
+            let profile: Vec<(usize, f64)> = (0..n)
+                .map(|i| {
+                    let q =
+                        i as f64 / n as f64 * (totals.len() - 1) as f64;
+                    (i, totals[q.round() as usize])
+                })
+                .collect();
+            let lens: Vec<f64> = profile.iter().map(|p| p.1).collect();
+            // Provisioning only needs the profile shape: aggregate 4x
+            // harder than placement (SA runs hundreds of DP evals).
+            let thresh = crate::util::stats::percentile(&lens, 0.75);
+            build_items(&profile, thresh, AGG_CHUNK * 4)
+        };
+
+        let allocation = match cfg.policy.resource {
+            ResourceKind::Adaptive => sort_initialized_sa(
+                &profile_items,
+                &cfg.model,
+                &cfg.cluster,
+                &cost_model,
+                SaParams::default(),
+                cfg.seed,
+            ),
+            ResourceKind::Fixed(k) => {
+                let k = k.max(cfg.model.min_mp);
+                evaluate(
+                    &fixed_allocation(cfg.cluster.n_gpus, k),
+                    &profile_items,
+                    &cfg.model,
+                    &cost_model,
+                )
+            }
+        };
+
+        // Placement (§5.2): partition the *actual* batch by its initial
+        // (prompt-only) predictions over the provisioned workers.
+        let preds: Vec<(usize, f64)> = specs
+            .iter()
+            .map(|t| {
+                (t.id, predictor.predict_total(&Observation::new(t, 0)))
+            })
+            .collect();
+        let partition = {
+            let lens: Vec<f64> = preds.iter().map(|p| p.1).collect();
+            let thresh = crate::util::stats::percentile(&lens, 0.5);
+            let items = build_items(&preds, thresh, AGG_CHUNK);
+            let workers: Vec<WorkerParams> = allocation
+                .degrees
+                .iter()
+                .map(|&d| WorkerParams {
+                    token_time: cfg.model.base_time_at_mp(d),
+                    mp: d,
+                    cap: d * cfg.cluster.max_batch_per_worker,
+                })
+                .collect();
+            presorted_dp_workers(&items, &workers, &cost_model)
+        };
+
+        let last_migration_pred: std::collections::HashMap<usize, f64> =
+            preds.iter().map(|&(id, p)| (id, p)).collect();
+        let mut router =
+            Router::new(cfg.policy.placement, allocation.n_workers());
+        let planner = if cfg.policy.placement == PlacementKind::PresortedDp {
+            router.set_assignment(&partition);
+            Some(MigrationPlanner::from_partition(&partition))
+        } else {
+            None
+        };
+
+        ControlPlane {
+            policy: cfg.policy,
+            predictor,
+            interference,
+            cost_model,
+            allocation,
+            router,
+            planner,
+            transmissions: TransmissionScheduler::new(),
+            last_migration_pred,
+            cfg: cfg.clone(),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.allocation.n_workers()
+    }
+
+    /// Per-worker contention-free token time (seconds).
+    pub fn worker_token_time(&self, worker: usize) -> f64 {
+        self.cfg.model.base_time_at_mp(self.allocation.degrees[worker])
+    }
+
+    /// Per-token time on `worker` at live batch `b` (both regimes).
+    pub fn worker_token_time_at(&self, worker: usize, batch: usize) -> f64 {
+        self.cfg.model.token_time(self.allocation.degrees[worker], batch)
+    }
+
+    /// Refresh a trajectory's prediction after step `k` (progressive
+    /// prediction, §4.1). Returns the predicted total length.
+    pub fn refresh_prediction(
+        &mut self,
+        spec: &TrajectorySpec,
+        steps_done: usize,
+    ) -> f64 {
+        self.predictor
+            .predict_total(&Observation::new(spec, steps_done))
+    }
+
+    /// Migration check (§5.3): with an updated prediction, does the
+    /// trajectory's rank map it to a different worker? `active` lists
+    /// (traj_id, predicted_len, current_worker) of all non-finished
+    /// trajectories. Returns a migration request if warranted.
+    pub fn check_migration(
+        &mut self,
+        traj_id: usize,
+        predicted_len: f64,
+        kv_tokens: usize,
+        active: &[(usize, f64, usize)],
+    ) -> Option<MigrationRequest> {
+        if !self.policy.migration {
+            return None;
+        }
+        let planner = self.planner.as_ref()?;
+        let n_active = active.len();
+        if n_active == 0 {
+            return None;
+        }
+        // Rank among remaining actives by predicted length descending.
+        let rank = active
+            .iter()
+            .filter(|(id, len, _)| {
+                *id != traj_id && *len > predicted_len
+            })
+            .count();
+        let target = planner.target_worker(rank, n_active);
+        let current = active
+            .iter()
+            .find(|(id, _, _)| *id == traj_id)
+            .map(|(_, _, w)| *w)?;
+        if target == current {
+            self.last_migration_pred.insert(traj_id, predicted_len);
+            return None;
+        }
+        // Debounce against prediction noise: a trajectory only migrates
+        // when its predicted length moved materially (>=1.5x in either
+        // direction) since its last placement decision — the paper's
+        // migrations exist to rectify *misclassifications*, not to chase
+        // every estimate wobble.
+        if let Some(&prev) = self.last_migration_pred.get(&traj_id) {
+            let ratio = predicted_len / prev.max(1.0);
+            if (0.67..=1.5).contains(&ratio) {
+                return None;
+            }
+        }
+        self.last_migration_pred.insert(traj_id, predicted_len);
+        // Never migrate into a worker already at slot capacity: that
+        // would trade interference for queueing delay.
+        let dst_cap = self.allocation.degrees[target]
+            * self.cfg.cluster.max_batch_per_worker;
+        if self.router.loads()[target] + 1 >= dst_cap {
+            return None;
+        }
+        Some(MigrationRequest {
+            traj_id,
+            src_worker: current,
+            dst_worker: target,
+            bytes: kv_tokens as f64 * self.cfg.model.kv_bytes_per_token,
+            predicted_len,
+        })
+    }
+
+    /// Re-run the full placement DP on the remaining trajectories (used
+    /// periodically / in ablations; day-to-day rebalance goes through the
+    /// cheaper scaled-partition planner).
+    pub fn replan_placement(
+        &mut self,
+        remaining: &[(usize, f64)],
+    ) -> Partition {
+        let lens: Vec<f64> = remaining.iter().map(|p| p.1).collect();
+        let thresh = crate::util::stats::percentile(&lens, 0.5);
+        let items = build_items(remaining, thresh, AGG_CHUNK);
+        let workers: Vec<WorkerParams> = self
+            .allocation
+            .degrees
+            .iter()
+            .map(|&d| WorkerParams {
+                token_time: self.cfg.model.base_time_at_mp(d),
+                mp: d,
+                cap: d * self.cfg.cluster.max_batch_per_worker,
+            })
+            .collect();
+        let p = presorted_dp_workers(&items, &workers, &self.cost_model);
+        self.router.set_assignment(&p);
+        self.planner = Some(MigrationPlanner::from_partition(&p));
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PolicyConfig, SimConfig};
+    use crate::predictor::history_workload;
+    use crate::workload::{generate, Domain, WorkloadConfig};
+
+    fn setup(policy: PolicyConfig) -> (SimConfig, Vec<TrajectorySpec>, ControlPlane) {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.n_gpus = 8;
+        cfg.policy = policy;
+        let history = history_workload(Domain::Coding, 1);
+        let specs = generate(&WorkloadConfig::new(Domain::Coding, 8, 2));
+        let cp = ControlPlane::new(&cfg, &history, &specs);
+        (cfg, specs, cp)
+    }
+
+    #[test]
+    fn heddle_control_plane_initializes() {
+        let (_, specs, cp) = setup(PolicyConfig::heddle());
+        assert!(cp.n_workers() >= 1);
+        assert_eq!(cp.allocation.total_gpus(), 8);
+        // Every trajectory must have an assignment.
+        for t in &specs {
+            assert!(cp.router.assigned_worker(t.id).is_some());
+        }
+        assert!(cp.planner.is_some());
+    }
+
+    #[test]
+    fn fixed_baseline_has_homogeneous_workers() {
+        let (_, _, cp) = setup(PolicyConfig::verl(2));
+        assert!(cp.allocation.degrees.iter().all(|&d| d == 2));
+        assert_eq!(cp.n_workers(), 4);
+        assert!(cp.planner.is_none(), "baselines do not migrate");
+    }
+
+    #[test]
+    fn migration_disabled_for_baselines() {
+        let (_, specs, mut cp) = setup(PolicyConfig::slime(1));
+        let active: Vec<(usize, f64, usize)> =
+            specs.iter().take(8).map(|t| (t.id, 100.0, 0)).collect();
+        assert!(cp
+            .check_migration(specs[0].id, 5000.0, 100, &active)
+            .is_none());
+    }
+
+    #[test]
+    fn migration_triggers_on_rank_change() {
+        let (_, specs, mut cp) = setup(PolicyConfig::heddle());
+        let n = cp.n_workers();
+        if n < 2 {
+            return; // single worker: nothing to migrate to
+        }
+        // Fake: trajectory 0 was placed as short (last worker), but its
+        // prediction explodes → should move toward worker 0.
+        let mut active: Vec<(usize, f64, usize)> = specs
+            .iter()
+            .take(32)
+            .map(|t| (t.id, 50.0, n - 1))
+            .collect();
+        active[0].1 = 1e9;
+        let req = cp.check_migration(specs[0].id, 1e9, 1000, &active);
+        let req = req.expect("rank-0 trajectory must migrate");
+        assert_eq!(req.dst_worker, 0);
+        assert!(req.bytes > 0.0);
+    }
+
+    #[test]
+    fn refresh_prediction_progresses() {
+        let (_, specs, mut cp) = setup(PolicyConfig::heddle());
+        let long = specs
+            .iter()
+            .max_by_key(|t| t.total_tokens())
+            .unwrap();
+        let p0 = cp.refresh_prediction(long, 0);
+        let p2 = cp.refresh_prediction(long, 2.min(long.n_steps()));
+        assert!(p0.is_finite() && p2.is_finite());
+        assert!(p2 >= 0.0);
+    }
+
+    #[test]
+    fn replan_installs_new_assignment() {
+        let (_, specs, mut cp) = setup(PolicyConfig::heddle());
+        let remaining: Vec<(usize, f64)> = specs
+            .iter()
+            .take(16)
+            .map(|t| (t.id, t.total_tokens() as f64))
+            .collect();
+        let p = cp.replan_placement(&remaining);
+        assert_eq!(p.groups.iter().flatten().count(), 16);
+        for (id, _) in &remaining {
+            assert!(cp.router.assigned_worker(*id).is_some());
+        }
+    }
+}

@@ -1,0 +1,326 @@
+//! Opportunistic trajectory migration (paper §5.3).
+//!
+//! Two pieces:
+//!  * [`MigrationPlanner`] — when a progressive-prediction update changes
+//!    a trajectory's rank, find its new worker *without* re-running the
+//!    DP: the original partition sizes are scaled by the fraction of
+//!    still-active trajectories (`s_i · n*/n`) and the trajectory maps to
+//!    the group containing its new rank.
+//!  * [`TransmissionScheduler`] — batches KV-cache transfers: per epoch
+//!    it greedily admits the longest-trajectory migration whose source
+//!    and destination endpoints are both free, building strictly
+//!    parallel, non-conflicting transfer sets (endpoint exclusivity
+//!    maximizes per-link bandwidth).
+//!
+//! Migrations are *opportunistic*: the data plane only executes them
+//! while the trajectory is parked in a tool call, so the transfer is off
+//! the critical path (§3 "Opportunistic State Migration"; overhead
+//! accounting in Table 1).
+
+use std::collections::HashSet;
+
+/// Maps a trajectory's rank (by predicted length, descending, among the
+/// *remaining active* trajectories) to its target worker.
+#[derive(Debug, Clone)]
+pub struct MigrationPlanner {
+    /// Original DP partition sizes {s_1..s_m} (trajectory counts).
+    orig_sizes: Vec<usize>,
+    /// Original total n.
+    n_total: usize,
+}
+
+impl MigrationPlanner {
+    pub fn new(orig_sizes: Vec<usize>, n_total: usize) -> Self {
+        assert!(!orig_sizes.is_empty());
+        MigrationPlanner { orig_sizes, n_total: n_total.max(1) }
+    }
+
+    pub fn from_partition(p: &super::placement::Partition) -> Self {
+        let sizes = p.sizes();
+        let n = sizes.iter().sum();
+        Self::new(sizes, n)
+    }
+
+    /// Scaled group capacities for `n_active` remaining trajectories
+    /// (fractional; consumed cumulatively by [`target_worker`]).
+    pub fn scaled_sizes(&self, n_active: usize) -> Vec<f64> {
+        let scale = n_active as f64 / self.n_total as f64;
+        self.orig_sizes.iter().map(|&s| s as f64 * scale).collect()
+    }
+
+    /// Worker that should host the trajectory ranked `rank` (0-based,
+    /// descending predicted length) among `n_active` remaining ones.
+    pub fn target_worker(&self, rank: usize, n_active: usize) -> usize {
+        let scaled = self.scaled_sizes(n_active);
+        let mut cum = 0.0;
+        for (i, s) in scaled.iter().enumerate() {
+            cum += s;
+            if (rank as f64) < cum {
+                return i;
+            }
+        }
+        self.orig_sizes.len() - 1
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.orig_sizes.len()
+    }
+}
+
+/// A pending KV-cache transfer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MigrationRequest {
+    pub traj_id: usize,
+    pub src_worker: usize,
+    pub dst_worker: usize,
+    /// KV-cache bytes to move.
+    pub bytes: f64,
+    /// Predicted trajectory length — the scheduling priority.
+    pub predicted_len: f64,
+}
+
+impl MigrationRequest {
+    /// Transfer seconds over a link of `bandwidth` bytes/s with fixed
+    /// handshake `latency`.
+    pub fn transfer_time(&self, bandwidth: f64, latency: f64) -> f64 {
+        latency + self.bytes / bandwidth
+    }
+}
+
+/// Endpoint-exclusive, longest-first transmission scheduling (§5.3).
+#[derive(Debug, Default)]
+pub struct TransmissionScheduler {
+    pending: Vec<MigrationRequest>,
+    /// Endpoints occupied by in-flight transfers.
+    busy: HashSet<usize>,
+}
+
+impl TransmissionScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn submit(&mut self, req: MigrationRequest) {
+        // A newer request for the same trajectory supersedes the old one
+        // (its target worker moved again).
+        self.pending.retain(|r| r.traj_id != req.traj_id);
+        if req.src_worker != req.dst_worker {
+            self.pending.push(req);
+        }
+    }
+
+    pub fn cancel(&mut self, traj_id: usize) {
+        self.pending.retain(|r| r.traj_id != traj_id);
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_endpoint_busy(&self, worker: usize) -> bool {
+        self.busy.contains(&worker)
+    }
+
+    /// Admit the next batch of strictly parallel transfers: iterate
+    /// pending requests in descending predicted length, selecting any
+    /// whose endpoints are both free, marking endpoints busy as we go.
+    pub fn next_batch(&mut self) -> Vec<MigrationRequest> {
+        self.pending.sort_by(|a, b| {
+            b.predicted_len
+                .partial_cmp(&a.predicted_len)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut batch = Vec::new();
+        let mut keep = Vec::new();
+        for req in self.pending.drain(..) {
+            if !self.busy.contains(&req.src_worker)
+                && !self.busy.contains(&req.dst_worker)
+            {
+                self.busy.insert(req.src_worker);
+                self.busy.insert(req.dst_worker);
+                batch.push(req);
+            } else {
+                keep.push(req);
+            }
+        }
+        self.pending = keep;
+        batch
+    }
+
+    /// A transfer finished: release its endpoints.
+    pub fn complete(&mut self, req: &MigrationRequest) {
+        self.busy.remove(&req.src_worker);
+        self.busy.remove(&req.dst_worker);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+
+    #[test]
+    fn planner_scales_sizes() {
+        let p = MigrationPlanner::new(vec![2, 8, 10], 20);
+        let s = p.scaled_sizes(10);
+        assert_eq!(s, vec![1.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn planner_target_by_rank() {
+        let p = MigrationPlanner::new(vec![2, 8, 10], 20);
+        // With all 20 active: ranks 0-1 → w0, 2-9 → w1, 10-19 → w2.
+        assert_eq!(p.target_worker(0, 20), 0);
+        assert_eq!(p.target_worker(1, 20), 0);
+        assert_eq!(p.target_worker(2, 20), 1);
+        assert_eq!(p.target_worker(9, 20), 1);
+        assert_eq!(p.target_worker(10, 20), 2);
+        assert_eq!(p.target_worker(19, 20), 2);
+        // With 10 left: capacities 1/4/5.
+        assert_eq!(p.target_worker(0, 10), 0);
+        assert_eq!(p.target_worker(1, 10), 1);
+        assert_eq!(p.target_worker(4, 10), 1);
+        assert_eq!(p.target_worker(5, 10), 2);
+        assert_eq!(p.target_worker(9, 10), 2);
+    }
+
+    #[test]
+    fn planner_rank_overflow_clamps_to_last() {
+        let p = MigrationPlanner::new(vec![4, 4], 8);
+        assert_eq!(p.target_worker(100, 8), 1);
+    }
+
+    fn req(id: usize, src: usize, dst: usize, len: f64) -> MigrationRequest {
+        MigrationRequest {
+            traj_id: id,
+            src_worker: src,
+            dst_worker: dst,
+            bytes: 1e6,
+            predicted_len: len,
+        }
+    }
+
+    #[test]
+    fn batch_prefers_longest() {
+        let mut ts = TransmissionScheduler::new();
+        ts.submit(req(1, 0, 1, 100.0));
+        ts.submit(req(2, 0, 2, 900.0)); // conflicts with #1 on src 0
+        let batch = ts.next_batch();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].traj_id, 2, "longest wins the contended link");
+        assert_eq!(ts.pending_len(), 1);
+    }
+
+    #[test]
+    fn batch_is_endpoint_exclusive() {
+        let mut ts = TransmissionScheduler::new();
+        ts.submit(req(1, 0, 1, 500.0));
+        ts.submit(req(2, 2, 3, 400.0));
+        ts.submit(req(3, 1, 2, 900.0)); // conflicts with both after #3 admitted
+        let batch = ts.next_batch();
+        // Longest-first: #3 (1→2) admitted; #1 conflicts on 1; #2
+        // conflicts on 2. Then 0→? none. So batch = {3} then {1,2} wait.
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].traj_id, 3);
+        // Complete it → endpoints free → both others can go in parallel.
+        ts.complete(&batch[0]);
+        let batch2 = ts.next_batch();
+        let ids: HashSet<usize> =
+            batch2.iter().map(|r| r.traj_id).collect();
+        assert_eq!(ids, HashSet::from([1, 2]));
+    }
+
+    #[test]
+    fn resubmit_supersedes() {
+        let mut ts = TransmissionScheduler::new();
+        ts.submit(req(1, 0, 1, 100.0));
+        ts.submit(req(1, 0, 2, 100.0)); // target changed again
+        assert_eq!(ts.pending_len(), 1);
+        let batch = ts.next_batch();
+        assert_eq!(batch[0].dst_worker, 2);
+    }
+
+    #[test]
+    fn self_migration_dropped() {
+        let mut ts = TransmissionScheduler::new();
+        ts.submit(req(1, 3, 3, 100.0));
+        assert_eq!(ts.pending_len(), 0);
+    }
+
+    #[test]
+    fn transfer_time_model() {
+        let r = req(1, 0, 1, 10.0);
+        // 1 MB at 50 GB/s + 10 ms latency.
+        let t = r.transfer_time(50e9, 0.010);
+        assert!((t - (0.010 + 1e6 / 50e9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_batches_never_share_endpoints() {
+        check("transmission_endpoint_exclusive", 50, |g| {
+            let mut rng = g.rng();
+            let mut ts = TransmissionScheduler::new();
+            let workers = 2 + rng.usize(8);
+            for id in 0..g.size {
+                let src = rng.usize(workers);
+                let mut dst = rng.usize(workers);
+                if dst == src {
+                    dst = (dst + 1) % workers;
+                }
+                ts.submit(req(id, src, dst, rng.lognormal(5.0, 1.0)));
+            }
+            let mut safety = 0;
+            loop {
+                let batch = ts.next_batch();
+                if batch.is_empty() {
+                    break;
+                }
+                let mut endpoints = HashSet::new();
+                for r in &batch {
+                    crate::prop_assert!(
+                        endpoints.insert(r.src_worker),
+                        "src endpoint double-booked"
+                    );
+                    crate::prop_assert!(
+                        endpoints.insert(r.dst_worker),
+                        "dst endpoint double-booked"
+                    );
+                }
+                for r in &batch {
+                    ts.complete(r);
+                }
+                safety += 1;
+                if safety > g.size + 2 {
+                    return Err("scheduler did not drain".into());
+                }
+            }
+            crate::prop_assert!(ts.pending_len() == 0, "requests stranded");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_planner_monotone_in_rank() {
+        // A worse (higher) rank must never map to a faster (lower-index,
+        // higher-MP) worker.
+        check("planner_monotone", 40, |g| {
+            let mut rng = g.rng();
+            let m = 1 + rng.usize(8);
+            let sizes: Vec<usize> =
+                (0..m).map(|_| 1 + rng.usize(20)).collect();
+            let n: usize = sizes.iter().sum();
+            let p = MigrationPlanner::new(sizes, n);
+            let n_active = 1 + rng.usize(n);
+            let mut prev = 0;
+            for rank in 0..n_active {
+                let w = p.target_worker(rank, n_active);
+                crate::prop_assert!(
+                    w >= prev,
+                    "rank {rank} mapped backwards: {w} < {prev}"
+                );
+                prev = w;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! The paper's system contribution (L3): trajectory-centric orchestration.
+//!
+//! * [`scheduler`] — when: progressive priority scheduling (§4, Alg. 1)
+//! * [`placement`] — where: presorted DP placement (§5.2, Lemma 5.1)
+//! * [`migration`] — where, at runtime: opportunistic migration (§5.3)
+//! * [`resource`]  — how: sort-initialized simulated annealing (§6, Alg. 2)
+//! * [`router`]    — dispatch enforcement + baseline routing policies
+//! * [`control`]   — the control plane tying the pieces together
+
+pub mod control;
+pub mod migration;
+pub mod placement;
+pub mod resource;
+pub mod router;
+pub mod scheduler;

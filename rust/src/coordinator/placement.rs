@@ -1,0 +1,756 @@
+//! Trajectory-aware placement (paper §5): presorted dynamic programming.
+//!
+//! Given trajectories sorted by (predicted) length descending, Lemma 5.1
+//! shows an optimal partition exists where every group is a contiguous
+//! run of the sorted order — provided the interference factor F is a
+//! monotone function of group *size* only. The DP then minimizes
+//!
+//! ```text
+//! max_j  F(|g_j|) · max_len(g_j) · T_j            (Formula 2)
+//! ```
+//!
+//! over contiguous partitions, where T_j is worker j's contention-free
+//! per-token time (heterogeneous workers: §6 assigns the longest block to
+//! the highest-MP worker, so T is sorted ascending here).
+//!
+//! Implementation notes:
+//!  * The O(n²m) textbook transition is replaced by a binary search per
+//!    (i, j) cell: `dp[k][j-1]` is non-decreasing in k while the group
+//!    term is non-increasing in k, so the optimal split bracket is found
+//!    in O(log n), giving O(nm log n) total. A naive reference
+//!    implementation is kept for property tests.
+//!  * Short-trajectory aggregation (§5.2): after sorting, runs of
+//!    trajectories below a length threshold are coalesced into composite
+//!    items (count > 1) to shrink n; F consumes trajectory *counts*, so
+//!    aggregation is exact w.r.t. group sizes and only coarsens the set
+//!    of split points.
+
+use crate::metrics; // used by doc-links; keeps module graph explicit
+use crate::util::stats;
+
+/// Interference factor F: per-token-time multiplier as a function of the
+/// number of co-located trajectories. Monotone non-decreasing with
+/// F(1) = 1 (§5.1 premise; `profiled` variants come from the runtime
+/// profiler on the real PJRT path).
+#[derive(Debug, Clone)]
+pub enum InterferenceModel {
+    /// Analytic: 1 + gamma * b^pow / 10 (matches config::ModelCost).
+    Analytic { gamma: f64, pow: f64 },
+    /// Piecewise-linear interpolation of profiled (batch, factor) points.
+    Profiled { points: Vec<(usize, f64)> },
+}
+
+impl InterferenceModel {
+    pub fn from_model(m: &crate::config::ModelCost) -> Self {
+        InterferenceModel::Analytic { gamma: m.interf_gamma, pow: m.interf_pow }
+    }
+
+    pub fn factor(&self, batch: usize) -> f64 {
+        if batch <= 1 {
+            return 1.0;
+        }
+        match self {
+            InterferenceModel::Analytic { gamma, pow } => {
+                1.0 + gamma * (batch as f64).powf(*pow) / 10.0
+            }
+            InterferenceModel::Profiled { points } => {
+                debug_assert!(!points.is_empty());
+                let b = batch as f64;
+                // Clamp below/above the profiled range.
+                if b <= points[0].0 as f64 {
+                    return points[0].1;
+                }
+                for w in points.windows(2) {
+                    let (b0, f0) = (w[0].0 as f64, w[0].1);
+                    let (b1, f1) = (w[1].0 as f64, w[1].1);
+                    if b <= b1 {
+                        return f0 + (f1 - f0) * (b - b0) / (b1 - b0);
+                    }
+                }
+                let last = points.last().unwrap();
+                let prev = &points[points.len() - 2];
+                // Extrapolate the final slope.
+                let slope = (last.1 - prev.1)
+                    / (last.0 as f64 - prev.0 as f64).max(1.0);
+                last.1 + slope * (b - last.0 as f64)
+            }
+        }
+    }
+}
+
+/// Group completion-cost model used by the DP (Formula 2, extended).
+///
+/// The paper's cost is `F(|g|) · max_len(g) · T`. Real workers also have
+/// a finite running-batch capacity B (`max_batch`): a group larger than B
+/// executes in ⌈|g|/B⌉ waves, each at interference F(min(|g|, B)). The
+/// wave term preserves the Lemma 5.1 swap argument — the cost still
+/// depends only on the group's *size* and *max length* — while preventing
+/// the §6 allocator from collapsing the cluster into one giant worker.
+/// `max_batch = usize::MAX` recovers the paper's pure formula.
+#[derive(Debug, Clone)]
+pub struct GroupCostModel {
+    pub interf: InterferenceModel,
+    pub max_batch: usize,
+    /// Fraction of wall time a trajectory actually occupies a GPU slot
+    /// (the rest is tool execution, during which the worker's slot is
+    /// released). Estimated from historical rollouts; 1.0 = always on
+    /// GPU. Scales the *effective* concurrent batch.
+    pub duty_cycle: f64,
+    /// Throughput-bound regime (config::ModelCost::token_time): seconds
+    /// per token per unit batch at MP-1 saturation (1 / sat_rate_1).
+    /// 0.0 disables the throughput bound (paper-pure cost).
+    pub sat_time: f64,
+    /// Worker saturated throughput ∝ mp^exp.
+    pub mp_thpt_exp: f64,
+    /// Include the work-conservation term (total group tokens / worker
+    /// service rate) in the group cost. The paper's Formula 2 uses the
+    /// max-length term only; the work term models continuous batching's
+    /// drain time and is required once running-batch capacity is finite.
+    /// Lemma 5.1's swap argument still holds: swapping a longer member
+    /// out for a shorter one leaves sizes unchanged and can only shrink
+    /// both max and sum.
+    pub use_work_term: bool,
+}
+
+/// Per-worker parameters for the heterogeneous DP.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerParams {
+    /// Contention-free per-token time at this worker's MP degree.
+    pub token_time: f64,
+    pub mp: usize,
+    /// Running-batch capacity (scales with MP degree).
+    pub cap: usize,
+}
+
+impl GroupCostModel {
+    pub fn paper(interf: InterferenceModel) -> Self {
+        GroupCostModel {
+            interf,
+            max_batch: usize::MAX,
+            duty_cycle: 1.0,
+            sat_time: 0.0,
+            mp_thpt_exp: 0.7,
+            use_work_term: false,
+        }
+    }
+
+    pub fn with_capacity(interf: InterferenceModel, max_batch: usize) -> Self {
+        GroupCostModel {
+            interf,
+            max_batch: max_batch.max(1),
+            duty_cycle: 1.0,
+            sat_time: 0.0,
+            mp_thpt_exp: 0.7,
+            use_work_term: false,
+        }
+    }
+
+    /// Full cost model matching `ModelCost::token_time`.
+    pub fn from_model(
+        model: &crate::config::ModelCost,
+        max_batch: usize,
+    ) -> Self {
+        let interf = InterferenceModel::from_model(model);
+        let sat_time = model.base_token_time
+            * interf.factor(model.sat_batch as usize)
+            / model.sat_batch;
+        GroupCostModel {
+            interf,
+            max_batch: max_batch.max(1),
+            duty_cycle: 1.0,
+            sat_time,
+            mp_thpt_exp: model.mp_thpt_exp,
+            use_work_term: true,
+        }
+    }
+
+    pub fn with_duty(mut self, duty: f64) -> Self {
+        self.duty_cycle = duty.clamp(0.05, 1.0);
+        self
+    }
+
+    /// Completion cost of a group of `count` trajectories whose longest
+    /// member has `max_len` tokens, on a worker with contention-free
+    /// per-token time `token_time`.
+    /// Per-token time on a worker at effective batch `b` — mirrors
+    /// `config::ModelCost::token_time` (latency vs throughput regimes).
+    pub fn token_time_at(&self, w: &WorkerParams, b: usize) -> f64 {
+        let b = b.max(1);
+        let per_gpu = (b + w.mp - 1) / w.mp.max(1);
+        let lat = w.token_time * self.interf.factor(per_gpu);
+        if self.sat_time == 0.0 {
+            return lat;
+        }
+        let thr = b as f64 * self.sat_time
+            / (w.mp.max(1) as f64).powf(self.mp_thpt_exp);
+        lat.max(thr)
+    }
+
+    /// Group completion cost on a heterogeneous worker.
+    ///
+    /// With `use_work_term`: the fluid continuous-batching model —
+    /// `max(tail latency, total work / worker service rate)` at the
+    /// effective live batch. Without: the paper's wave model.
+    pub fn cost_worker(
+        &self,
+        count: usize,
+        max_len: f64,
+        w: &WorkerParams,
+    ) -> f64 {
+        self.cost_worker_work(count, max_len, max_len * count as f64, w)
+    }
+
+    /// Full form with the group's total predicted tokens.
+    pub fn cost_worker_work(
+        &self,
+        count: usize,
+        max_len: f64,
+        total_len: f64,
+        w: &WorkerParams,
+    ) -> f64 {
+        if count == 0 {
+            return 0.0;
+        }
+        // Tool-parked trajectories release their slot: only
+        // `count * duty_cycle` compete for the running batch at a time.
+        let eff_demand =
+            ((count as f64 * self.duty_cycle).ceil() as usize).max(1);
+        let cap = w.cap.max(1);
+        let eff = eff_demand.min(cap);
+        let t = self.token_time_at(w, eff);
+        if self.use_work_term {
+            // Tail latency at the live batch vs drain time of the whole
+            // group at the worker's service rate (eff tokens per t).
+            let tail = max_len * t;
+            let drain = total_len * t / eff as f64;
+            tail.max(drain)
+        } else {
+            let waves = if cap == usize::MAX {
+                1
+            } else {
+                (eff_demand + cap - 1) / cap
+            };
+            max_len * t * waves as f64
+        }
+    }
+
+    /// Homogeneous MP=1 cost at this model's uniform `max_batch`.
+    pub fn cost(&self, count: usize, max_len: f64, token_time: f64) -> f64 {
+        self.cost_worker(
+            count,
+            max_len,
+            &WorkerParams { token_time, mp: 1, cap: self.max_batch },
+        )
+    }
+}
+
+/// An item to place: either one trajectory or an aggregated run of short
+/// trajectories (§5.2 acceleration heuristic).
+#[derive(Debug, Clone)]
+pub struct PlaceItem {
+    /// Trajectory ids contained in this item.
+    pub ids: Vec<usize>,
+    /// Dominant (max) predicted length among the contained trajectories.
+    pub length: f64,
+    /// Sum of predicted lengths (work-conservation term of the cost).
+    pub total: f64,
+}
+
+impl PlaceItem {
+    pub fn single(id: usize, length: f64) -> Self {
+        PlaceItem { ids: vec![id], length, total: length }
+    }
+
+    pub fn count(&self) -> usize {
+        self.ids.len()
+    }
+}
+
+/// Build the sorted item list from (id, predicted_length) pairs.
+/// `aggregate_below`: lengths under this threshold are coalesced into
+/// composite items of up to `chunk` trajectories.
+pub fn build_items(
+    preds: &[(usize, f64)],
+    aggregate_below: f64,
+    chunk: usize,
+) -> Vec<PlaceItem> {
+    let mut sorted: Vec<(usize, f64)> = preds.to_vec();
+    sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut items = Vec::new();
+    let mut i = 0;
+    while i < sorted.len() {
+        let (id, len) = sorted[i];
+        if len >= aggregate_below || chunk <= 1 {
+            items.push(PlaceItem::single(id, len));
+            i += 1;
+        } else {
+            let end = (i + chunk).min(sorted.len());
+            let ids: Vec<usize> = sorted[i..end].iter().map(|p| p.0).collect();
+            let total: f64 = sorted[i..end].iter().map(|p| p.1).sum();
+            // Dominant length of the run = first element (sorted desc).
+            items.push(PlaceItem { ids, length: len, total });
+            i = end;
+        }
+    }
+    items
+}
+
+/// Result of the placement DP.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// groups[j] = trajectory ids assigned to worker j. Group 0 holds the
+    /// longest trajectories (assign to the highest-MP worker).
+    pub groups: Vec<Vec<usize>>,
+    /// Estimated makespan of the partition (seconds).
+    pub makespan: f64,
+}
+
+impl Partition {
+    /// Sizes per worker (trajectory counts).
+    pub fn sizes(&self) -> Vec<usize> {
+        self.groups.iter().map(|g| g.len()).collect()
+    }
+}
+
+/// Presorted DP (Formula 3). `items` must be sorted by length descending
+/// (as produced by [`build_items`]). `worker_token_time[j]` is worker
+/// j's contention-free per-token seconds (ascending makespans want the
+/// largest block on the fastest worker, so callers pass times sorted
+/// ascending — the §6.2 sort-initialized mapping).
+pub fn presorted_dp(
+    items: &[PlaceItem],
+    worker_token_time: &[f64],
+    cost_model: &GroupCostModel,
+) -> Partition {
+    let workers: Vec<WorkerParams> = worker_token_time
+        .iter()
+        .map(|&t| WorkerParams { token_time: t, mp: 1, cap: cost_model.max_batch })
+        .collect();
+    presorted_dp_workers(items, &workers, cost_model)
+}
+
+/// DP over heterogeneous workers (per-worker MP degree and capacity).
+pub fn presorted_dp_workers(
+    items: &[PlaceItem],
+    workers: &[WorkerParams],
+    cost_model: &GroupCostModel,
+) -> Partition {
+    let n = items.len();
+    let m = workers.len();
+    assert!(m > 0, "need at least one worker");
+    debug_assert!(
+        items.windows(2).all(|w| w[0].length >= w[1].length),
+        "items must be sorted descending"
+    );
+    if n == 0 {
+        return Partition { groups: vec![vec![]; m], makespan: 0.0 };
+    }
+
+    // Prefix counts / sums: count(k..i) = pc[i] - pc[k], etc.
+    let mut pc = vec![0usize; n + 1];
+    let mut ps = vec![0.0f64; n + 1];
+    for (i, it) in items.iter().enumerate() {
+        pc[i + 1] = pc[i] + it.count();
+        ps[i + 1] = ps[i] + it.total;
+    }
+
+    // Group cost of items [k..i) on worker j (0-based, i>k).
+    let group_cost = |k: usize, i: usize, j: usize| -> f64 {
+        let cnt = pc[i] - pc[k];
+        cost_model.cost_worker_work(
+            cnt,
+            items[k].length,
+            ps[i] - ps[k],
+            &workers[j],
+        )
+    };
+
+    const INF: f64 = f64::INFINITY;
+    // dp[j][i]: best makespan of first i items on first j+1 workers.
+    let mut dp = vec![vec![INF; n + 1]; m];
+    let mut split = vec![vec![0usize; n + 1]; m];
+    for i in 0..=n {
+        dp[0][i] = if i == 0 { 0.0 } else { group_cost(0, i, 0) };
+    }
+    // The binary-search transition needs the group term monotone
+    // non-increasing in k; that holds for the paper cost but not for the
+    // work-conservation term (F(b)/b is non-monotone). Fall back to the
+    // exhaustive transition in that case — control-plane calls always go
+    // through aggregated items, so n stays small there.
+    let exhaustive = cost_model.use_work_term;
+    for j in 1..m {
+        dp[j][0] = 0.0;
+        for i in 1..=n {
+            let mut best = INF;
+            let mut best_k = 0;
+            if exhaustive {
+                for k in 0..=i {
+                    let g =
+                        if k == i { 0.0 } else { group_cost(k, i, j) };
+                    let cost = dp[j - 1][k].max(g);
+                    if cost < best {
+                        best = cost;
+                        best_k = k;
+                    }
+                }
+            } else {
+                // dp[j-1][k] is non-decreasing in k; group_cost(k,i,j)
+                // is non-increasing in k → binary search the crossover.
+                let (mut lo, mut hi) = (0usize, i);
+                while lo < hi {
+                    let mid = (lo + hi) / 2;
+                    let left = dp[j - 1][mid];
+                    let right =
+                        if mid == i { 0.0 } else { group_cost(mid, i, j) };
+                    if left >= right {
+                        hi = mid;
+                    } else {
+                        lo = mid + 1;
+                    }
+                }
+                best_k = lo;
+                for k in lo.saturating_sub(1)..=lo.min(i) {
+                    let cost = dp[j - 1][k].max(if k == i {
+                        0.0
+                    } else {
+                        group_cost(k, i, j)
+                    });
+                    if cost < best {
+                        best = cost;
+                        best_k = k;
+                    }
+                }
+            }
+            dp[j][i] = best;
+            split[j][i] = best_k;
+        }
+    }
+
+    // Recover groups.
+    let mut groups = vec![Vec::new(); m];
+    let mut i = n;
+    for j in (0..m).rev() {
+        let k = if j == 0 { 0 } else { split[j][i] };
+        for item in &items[k..i] {
+            groups[j].extend_from_slice(&item.ids);
+        }
+        i = k;
+    }
+    Partition { groups, makespan: dp[m - 1][n] }
+}
+
+/// Naive O(n²m) reference DP — used by property tests to validate the
+/// binary-search optimization, and small enough to read against Eq. 3.
+pub fn presorted_dp_naive(
+    items: &[PlaceItem],
+    worker_token_time: &[f64],
+    cost_model: &GroupCostModel,
+) -> f64 {
+    let n = items.len();
+    let m = worker_token_time.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut pc = vec![0usize; n + 1];
+    for (i, it) in items.iter().enumerate() {
+        pc[i + 1] = pc[i] + it.count();
+    }
+    let group_cost = |k: usize, i: usize, j: usize| -> f64 {
+        let cnt = pc[i] - pc[k];
+        cost_model.cost(cnt, items[k].length, worker_token_time[j])
+    };
+    const INF: f64 = f64::INFINITY;
+    let mut dp = vec![vec![INF; n + 1]; m];
+    for i in 0..=n {
+        dp[0][i] = if i == 0 { 0.0 } else { group_cost(0, i, 0) };
+    }
+    for j in 1..m {
+        dp[j][0] = 0.0;
+        for i in 1..=n {
+            for k in 0..=i {
+                let g = if k == i { 0.0 } else { group_cost(k, i, j) };
+                let cost = dp[j - 1][k].max(g);
+                if cost < dp[j][i] {
+                    dp[j][i] = cost;
+                }
+            }
+        }
+    }
+    dp[m - 1][n]
+}
+
+/// Exhaustive optimum over ALL partitions (not just contiguous) — tiny
+/// inputs only; verifies Lemma 5.1 in tests.
+pub fn brute_force_optimal(
+    lengths: &[f64],
+    worker_token_time: &[f64],
+    cost_model: &GroupCostModel,
+) -> f64 {
+    let n = lengths.len();
+    let m = worker_token_time.len();
+    assert!(n <= 10, "brute force explodes");
+    let mut assign = vec![0usize; n];
+    let mut best = f64::INFINITY;
+    loop {
+        // Evaluate this assignment.
+        let mut maxlen = vec![0.0f64; m];
+        let mut cnt = vec![0usize; m];
+        for (i, &a) in assign.iter().enumerate() {
+            cnt[a] += 1;
+            if lengths[i] > maxlen[a] {
+                maxlen[a] = lengths[i];
+            }
+        }
+        let mut ms: f64 = 0.0;
+        for j in 0..m {
+            if cnt[j] > 0 {
+                ms = ms.max(cost_model.cost(
+                    cnt[j],
+                    maxlen[j],
+                    worker_token_time[j],
+                ));
+            }
+        }
+        if ms < best {
+            best = ms;
+        }
+        // Next assignment in base-m.
+        let mut i = 0;
+        loop {
+            if i == n {
+                return best;
+            }
+            assign[i] += 1;
+            if assign[i] < m {
+                break;
+            }
+            assign[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+/// Observed load skew (max/min active trajectories) — drives the Verl*
+/// hybrid threshold and the Fig. 15 analysis.
+pub fn load_skew(active_per_worker: &[usize]) -> f64 {
+    let max = active_per_worker.iter().copied().max().unwrap_or(0) as f64;
+    let min = active_per_worker.iter().copied().min().unwrap_or(0).max(1) as f64;
+    max / min
+}
+
+#[allow(unused)]
+fn _doc_links() {
+    let _ = stats::mean;
+    let _ = std::mem::size_of::<metrics::RolloutReport>();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+    use crate::util::rng::Rng;
+
+    fn interf() -> GroupCostModel {
+        GroupCostModel::paper(InterferenceModel::Analytic {
+            gamma: 0.22,
+            pow: 0.85,
+        })
+    }
+
+    fn items_from(lengths: &[f64]) -> Vec<PlaceItem> {
+        let preds: Vec<(usize, f64)> =
+            lengths.iter().copied().enumerate().collect();
+        build_items(&preds, 0.0, 1)
+    }
+
+    #[test]
+    fn single_worker_single_group() {
+        let items = items_from(&[100.0, 50.0, 10.0]);
+        let p = presorted_dp(&items, &[0.01], &interf());
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.groups[0].len(), 3);
+        let expect = interf().cost(3, 100.0, 0.01);
+        assert!((p.makespan - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_workers_separates_long_from_short() {
+        // One giant trajectory + many short: the giant should be isolated
+        // (the paper's core placement intuition, Fig. 6).
+        let mut lengths = vec![10_000.0];
+        lengths.extend(std::iter::repeat(100.0).take(20));
+        let items = items_from(&lengths);
+        let p = presorted_dp(&items, &[0.01, 0.01], &interf());
+        assert_eq!(p.groups[0], vec![0], "long trajectory must be isolated");
+        assert_eq!(p.groups[1].len(), 20);
+    }
+
+    #[test]
+    fn matches_naive_dp() {
+        let mut rng = Rng::new(1);
+        for _ in 0..30 {
+            let n = 1 + rng.usize(40);
+            let m = 1 + rng.usize(6);
+            let mut lengths: Vec<f64> =
+                (0..n).map(|_| rng.lognormal(5.0, 1.0)).collect();
+            lengths.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let items = items_from(&lengths);
+            let times: Vec<f64> =
+                (0..m).map(|_| 0.005 + rng.f64() * 0.02).collect();
+            let fast = presorted_dp(&items, &times, &interf()).makespan;
+            let naive = presorted_dp_naive(&items, &times, &interf());
+            assert!(
+                (fast - naive).abs() < 1e-9 * naive.max(1.0),
+                "fast={fast} naive={naive} n={n} m={m}"
+            );
+        }
+    }
+
+    #[test]
+    fn lemma_5_1_contiguous_is_globally_optimal() {
+        // DP over contiguous partitions of the sorted order must equal
+        // the exhaustive optimum over ALL partitions (homogeneous
+        // workers; F monotone in group size) — Lemma 5.1.
+        let mut rng = Rng::new(2);
+        for _ in 0..25 {
+            let n = 2 + rng.usize(7);
+            let m = 1 + rng.usize(3);
+            let mut lengths: Vec<f64> =
+                (0..n).map(|_| rng.lognormal(4.0, 1.2)).collect();
+            lengths.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let times = vec![0.01; m];
+            let dp = presorted_dp(&items_from(&lengths), &times, &interf());
+            let brute = brute_force_optimal(&lengths, &times, &interf());
+            assert!(
+                (dp.makespan - brute).abs() < 1e-9 * brute.max(1.0),
+                "dp={} brute={brute} lengths={lengths:?} m={m}",
+                dp.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn property_dp_beats_random_contiguous_partitions() {
+        check("dp_le_random_partition", 60, |g| {
+            let mut rng = g.rng();
+            let n = 2 + g.size % 30;
+            let m = 1 + rng.usize(5);
+            let mut lengths: Vec<f64> =
+                (0..n).map(|_| rng.lognormal(5.0, 1.0)).collect();
+            lengths.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let items = items_from(&lengths);
+            let times: Vec<f64> =
+                (0..m).map(|_| 0.004 + rng.f64() * 0.04).collect();
+            let inter = interf();
+            let dp = presorted_dp(&items, &times, &inter).makespan;
+            // Random contiguous partition: m-1 sorted cut points.
+            let mut cuts: Vec<usize> = (0..m - 1).map(|_| rng.usize(n + 1)).collect();
+            cuts.sort();
+            let mut bounds = vec![0usize];
+            bounds.extend(cuts);
+            bounds.push(n);
+            let mut ms: f64 = 0.0;
+            for j in 0..m {
+                let (a, b) = (bounds[j], bounds[j + 1]);
+                if a < b {
+                    let cnt = b - a;
+                    ms = ms.max(inter.cost(cnt, lengths[a], times[j]));
+                }
+            }
+            crate::prop_assert!(
+                dp <= ms + 1e-9,
+                "dp {dp} worse than random partition {ms}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_partition_is_exact_cover() {
+        check("partition_exact_cover", 40, |g| {
+            let mut rng = g.rng();
+            let n = 1 + g.size;
+            let m = 1 + rng.usize(8);
+            let mut preds: Vec<(usize, f64)> =
+                (0..n).map(|i| (i, rng.lognormal(5.0, 1.0))).collect();
+            preds.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let items = build_items(&preds, 30.0, 4);
+            let times = vec![0.01; m];
+            let p = presorted_dp(&items, &times, &interf());
+            let mut seen: Vec<usize> =
+                p.groups.iter().flatten().copied().collect();
+            seen.sort();
+            let expect: Vec<usize> = (0..n).collect();
+            crate::prop_assert!(
+                seen == expect,
+                "groups must partition ids exactly: {seen:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn aggregation_reduces_items_but_not_quality_much() {
+        let mut rng = Rng::new(3);
+        let n = 400;
+        let preds: Vec<(usize, f64)> =
+            (0..n).map(|i| (i, rng.lognormal(5.0, 1.2))).collect();
+        let exact = build_items(&preds, 0.0, 1);
+        let thresh = {
+            let lens: Vec<f64> = preds.iter().map(|p| p.1).collect();
+            stats::percentile(&lens, 0.5)
+        };
+        let agg = build_items(&preds, thresh, 16);
+        assert!(agg.len() < exact.len() * 6 / 10, "aggregation too weak");
+        let times = vec![0.01; 8];
+        let m_exact = presorted_dp(&exact, &times, &interf()).makespan;
+        let m_agg = presorted_dp(&agg, &times, &interf()).makespan;
+        assert!(
+            m_agg <= m_exact * 1.10,
+            "aggregated {m_agg} vs exact {m_exact}"
+        );
+    }
+
+    #[test]
+    fn heterogeneous_workers_longest_to_fastest() {
+        // Worker 0 is 4x faster: the longest trajectory's group term
+        // should use it (groups[0] holds the longest items by contract).
+        let lengths = vec![1000.0, 100.0, 90.0, 80.0];
+        let items = items_from(&lengths);
+        let p = presorted_dp(&items, &[0.0025, 0.01], &interf());
+        assert!(p.groups[0].contains(&0));
+        // Expected: isolating the long one on the fast worker.
+        assert_eq!(p.groups[0], vec![0]);
+    }
+
+    #[test]
+    fn profiled_interference_interpolates() {
+        let f = InterferenceModel::Profiled {
+            points: vec![(1, 1.0), (4, 1.6), (8, 2.4)],
+        };
+        assert_eq!(f.factor(1), 1.0);
+        assert!((f.factor(2) - 1.2).abs() < 1e-9);
+        assert!((f.factor(6) - 2.0).abs() < 1e-9);
+        assert!((f.factor(8) - 2.4).abs() < 1e-9);
+        // Extrapolation continues the last slope.
+        assert!(f.factor(16) > 2.4);
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let p = presorted_dp(&[], &[0.01, 0.01], &interf());
+        assert_eq!(p.makespan, 0.0);
+        assert!(p.groups.iter().all(|g| g.is_empty()));
+        // More workers than items: extras stay empty.
+        let items = items_from(&[10.0]);
+        let p = presorted_dp(&items, &[0.01; 4], &interf());
+        assert_eq!(p.groups.iter().flatten().count(), 1);
+    }
+
+    #[test]
+    fn load_skew_metric() {
+        assert_eq!(load_skew(&[10, 5, 2]), 5.0);
+        assert_eq!(load_skew(&[4, 4]), 1.0);
+        assert_eq!(load_skew(&[8, 0]), 8.0);
+    }
+}

@@ -1,0 +1,492 @@
+//! Trajectory-adaptive resource management (paper §6, Algorithm 2):
+//! sort-initialized simulated annealing over heterogeneous model-
+//! parallelism allocations.
+//!
+//! An allocation is a multiset of MP degrees `{N_1..N_m}` (each from the
+//! cluster's valid degree set, each >= the model's `min_mp`) summing to
+//! the GPU budget N. Degrees are kept sorted descending; the i-th
+//! partition block (longest trajectories first) deterministically maps to
+//! the i-th worker — the "sort-initialized mapping". Candidate
+//! allocations are scored by running the presorted placement DP with the
+//! per-worker base token times implied by their MP degrees.
+//!
+//! Perturbations (Algorithm 2 line 6): *split* one worker into two
+//! halves, *merge* two equal workers, or *redistribute* (a split
+//! immediately followed by an independent merge, reshaping the allocation
+//! at constant GPU budget).
+
+use super::placement::{presorted_dp_workers, GroupCostModel, Partition, PlaceItem, WorkerParams};
+use crate::config::{ClusterConfig, ModelCost};
+use crate::util::rng::Rng;
+
+/// A scored heterogeneous allocation.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    /// MP degree per worker, sorted descending.
+    pub degrees: Vec<usize>,
+    /// Placement of the scoring workload under this allocation.
+    pub partition: Partition,
+    /// Estimated rollout makespan (the SA objective C).
+    pub makespan: f64,
+}
+
+impl Allocation {
+    pub fn n_workers(&self) -> usize {
+        self.degrees.len()
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.degrees.iter().sum()
+    }
+
+    /// Per-worker contention-free token times (ascending — matches the
+    /// descending degree order the DP expects).
+    pub fn token_times(&self, model: &ModelCost) -> Vec<f64> {
+        self.degrees.iter().map(|&d| model.base_time_at_mp(d)).collect()
+    }
+}
+
+/// SA hyperparameters (paper defaults: geometric cooling to a threshold).
+#[derive(Debug, Clone, Copy)]
+pub struct SaParams {
+    pub cooling: f64,
+    /// Terminate when temperature < epsilon_frac * initial.
+    pub epsilon_frac: f64,
+    /// Moves attempted per temperature.
+    pub moves_per_temp: usize,
+}
+
+impl Default for SaParams {
+    fn default() -> Self {
+        SaParams { cooling: 0.93, epsilon_frac: 1e-3, moves_per_temp: 4 }
+    }
+}
+
+/// Valid degrees for this model on this cluster.
+fn valid_degrees(cluster: &ClusterConfig, model: &ModelCost) -> Vec<usize> {
+    let mut d: Vec<usize> = cluster
+        .mp_degrees
+        .iter()
+        .copied()
+        .filter(|&d| d >= model.min_mp)
+        .collect();
+    d.sort();
+    assert!(!d.is_empty(), "no valid MP degree >= min_mp");
+    d
+}
+
+/// Random valid allocation summing exactly to the budget (Algorithm 2
+/// line 1). Falls back to the smallest degree to close the remainder.
+pub fn random_allocation(
+    budget: usize,
+    degrees: &[usize],
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let dmin = degrees[0];
+    assert!(budget % dmin == 0, "budget must be divisible by min degree");
+    let mut out = Vec::new();
+    let mut left = budget;
+    while left > 0 {
+        let feasible: Vec<usize> =
+            degrees.iter().copied().filter(|&d| d <= left).collect();
+        let d = *rng.choose(&feasible);
+        out.push(d);
+        left -= d;
+    }
+    out.sort_unstable_by(|a, b| b.cmp(a));
+    out
+}
+
+/// Homogeneous Fix-k allocation (Fig. 16 baselines).
+pub fn fixed_allocation(budget: usize, k: usize) -> Vec<usize> {
+    assert!(budget >= k && k > 0);
+    vec![k; budget / k]
+}
+
+/// Score an allocation: DP the workload over its implied token times.
+pub fn evaluate(
+    degrees: &[usize],
+    items: &[PlaceItem],
+    model: &ModelCost,
+    cost_model: &GroupCostModel,
+) -> Allocation {
+    debug_assert!(degrees.windows(2).all(|w| w[0] >= w[1]));
+    // Running-batch capacity scales with MP degree (KV memory scales
+    // with the number of shards).
+    let workers: Vec<WorkerParams> = degrees
+        .iter()
+        .map(|&d| WorkerParams {
+            token_time: model.base_time_at_mp(d),
+            mp: d,
+            cap: d * cost_model.max_batch,
+        })
+        .collect();
+    let partition = presorted_dp_workers(items, &workers, cost_model);
+    Allocation {
+        degrees: degrees.to_vec(),
+        makespan: partition.makespan,
+        partition,
+    }
+}
+
+/// One random perturbation; returns None if the move is inapplicable.
+fn perturb(
+    degrees: &[usize],
+    valid: &[usize],
+    rng: &mut Rng,
+) -> Option<Vec<usize>> {
+    let mut d = degrees.to_vec();
+    let dmax = *valid.last().unwrap();
+    let dmin = valid[0];
+    match rng.usize(3) {
+        // Split: one worker of degree 2k -> two workers of degree k.
+        0 => {
+            let splittable: Vec<usize> = (0..d.len())
+                .filter(|&i| d[i] > dmin && valid.contains(&(d[i] / 2)))
+                .collect();
+            if splittable.is_empty() {
+                return None;
+            }
+            let i = *rng.choose(&splittable);
+            let half = d[i] / 2;
+            d.swap_remove(i);
+            d.push(half);
+            d.push(half);
+        }
+        // Merge: two workers of equal degree k -> one of degree 2k.
+        1 => {
+            let mut pairs = Vec::new();
+            for &deg in valid {
+                if deg < dmax
+                    && valid.contains(&(deg * 2))
+                    && d.iter().filter(|&&x| x == deg).count() >= 2
+                {
+                    pairs.push(deg);
+                }
+            }
+            if pairs.is_empty() {
+                return None;
+            }
+            let deg = *rng.choose(&pairs);
+            let i = d.iter().position(|&x| x == deg).unwrap();
+            d.remove(i);
+            let j = d.iter().position(|&x| x == deg).unwrap();
+            d.remove(j);
+            d.push(deg * 2);
+        }
+        // Redistribute: split somewhere, merge somewhere else.
+        _ => {
+            let d1 = perturb_move(&d, valid, rng, 0)?;
+            let d2 = perturb_move(&d1, valid, rng, 1)?;
+            d = d2;
+        }
+    }
+    d.sort_unstable_by(|a, b| b.cmp(a));
+    Some(d)
+}
+
+fn perturb_move(
+    degrees: &[usize],
+    valid: &[usize],
+    rng: &mut Rng,
+    kind: usize,
+) -> Option<Vec<usize>> {
+    let mut d = degrees.to_vec();
+    let dmin = valid[0];
+    let dmax = *valid.last().unwrap();
+    if kind == 0 {
+        let splittable: Vec<usize> = (0..d.len())
+            .filter(|&i| d[i] > dmin && valid.contains(&(d[i] / 2)))
+            .collect();
+        if splittable.is_empty() {
+            return None;
+        }
+        let i = *rng.choose(&splittable);
+        let half = d[i] / 2;
+        d.swap_remove(i);
+        d.push(half);
+        d.push(half);
+    } else {
+        let mut pairs = Vec::new();
+        for &deg in valid {
+            if deg < dmax
+                && valid.contains(&(deg * 2))
+                && d.iter().filter(|&&x| x == deg).count() >= 2
+            {
+                pairs.push(deg);
+            }
+        }
+        if pairs.is_empty() {
+            return None;
+        }
+        let deg = *rng.choose(&pairs);
+        let i = d.iter().position(|&x| x == deg).unwrap();
+        d.remove(i);
+        let j = d.iter().position(|&x| x == deg).unwrap();
+        d.remove(j);
+        d.push(deg * 2);
+    }
+    Some(d)
+}
+
+/// Algorithm 2: sort-initialized simulated annealing.
+pub fn sort_initialized_sa(
+    items: &[PlaceItem],
+    model: &ModelCost,
+    cluster: &ClusterConfig,
+    cost_model: &GroupCostModel,
+    params: SaParams,
+    seed: u64,
+) -> Allocation {
+    let valid = valid_degrees(cluster, model);
+    let mut rng = Rng::new(seed ^ 0x5a5a);
+
+    // Line 1-4: random sorted allocation; initial temperature = its cost.
+    let init = random_allocation(cluster.n_gpus, &valid, &mut rng);
+    let mut current = evaluate(&init, items, model, cost_model);
+    let mut best = current.clone();
+    let mut temp = current.makespan.max(1e-9);
+    let threshold = temp * params.epsilon_frac;
+
+    // Line 5-14: anneal.
+    while temp > threshold {
+        for _ in 0..params.moves_per_temp {
+            let Some(cand_degrees) = perturb(&current.degrees, &valid, &mut rng)
+            else {
+                continue;
+            };
+            let cand = evaluate(&cand_degrees, items, model, cost_model);
+            let delta = cand.makespan - current.makespan;
+            if delta < 0.0 || rng.f64() < (-delta / temp).exp() {
+                current = cand;
+                if current.makespan < best.makespan {
+                    best = current.clone();
+                }
+            }
+        }
+        temp *= params.cooling;
+    }
+    best
+}
+
+/// Exhaustive search over all valid degree compositions (small budgets
+/// only) — the "naive baseline" the paper rules out; used in tests to
+/// verify SA reaches (near-)optimal allocations.
+pub fn exhaustive_best(
+    items: &[PlaceItem],
+    model: &ModelCost,
+    cluster: &ClusterConfig,
+    cost_model: &GroupCostModel,
+) -> Allocation {
+    let valid = valid_degrees(cluster, model);
+    let mut best: Option<Allocation> = None;
+    // Enumerate multisets of degrees summing to budget via DFS.
+    fn dfs(
+        valid: &[usize],
+        max_idx: usize,
+        left: usize,
+        acc: &mut Vec<usize>,
+        out: &mut dyn FnMut(&[usize]),
+    ) {
+        if left == 0 {
+            out(acc);
+            return;
+        }
+        for i in (0..=max_idx).rev() {
+            let d = valid[i];
+            if d <= left {
+                acc.push(d);
+                dfs(valid, i, left - d, acc, out);
+                acc.pop();
+            }
+        }
+    }
+    let mut acc = Vec::new();
+    dfs(
+        &valid,
+        valid.len() - 1,
+        cluster.n_gpus,
+        &mut acc,
+        &mut |degrees: &[usize]| {
+            let a = evaluate(degrees, items, model, cost_model);
+            if best.as_ref().map(|b| a.makespan < b.makespan).unwrap_or(true)
+            {
+                best = Some(a);
+            }
+        },
+    );
+    best.expect("no valid allocation")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+    use crate::workload::{generate, Domain, WorkloadConfig};
+
+    fn test_items(seed: u64, n_prompts: usize) -> Vec<PlaceItem> {
+        let specs =
+            generate(&WorkloadConfig::new(Domain::Coding, n_prompts, seed));
+        let preds: Vec<(usize, f64)> = specs
+            .iter()
+            .map(|t| (t.id, t.total_tokens() as f64))
+            .collect();
+        super::super::placement::build_items(&preds, 200.0, 8)
+    }
+
+    fn small_cluster(n: usize) -> ClusterConfig {
+        ClusterConfig {
+            n_gpus: n,
+            mp_degrees: vec![1, 2, 4, 8],
+            ..Default::default()
+        }
+    }
+
+    fn interf(m: &ModelCost) -> GroupCostModel {
+        GroupCostModel::with_capacity(
+            super::super::placement::InterferenceModel::from_model(m),
+            16,
+        )
+    }
+
+    #[test]
+    fn random_allocation_sums_to_budget() {
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let a = random_allocation(16, &[1, 2, 4, 8], &mut rng);
+            assert_eq!(a.iter().sum::<usize>(), 16);
+            assert!(a.windows(2).all(|w| w[0] >= w[1]), "sorted desc");
+            assert!(a.iter().all(|d| [1, 2, 4, 8].contains(d)));
+        }
+    }
+
+    #[test]
+    fn fixed_allocation_shape() {
+        assert_eq!(fixed_allocation(16, 1).len(), 16);
+        assert_eq!(fixed_allocation(16, 8), vec![8, 8]);
+    }
+
+    #[test]
+    fn perturb_preserves_budget_and_validity() {
+        check("perturb_budget_invariant", 60, |g| {
+            let mut rng = g.rng();
+            let valid = vec![1usize, 2, 4, 8];
+            let budget = 8 * (1 + g.size % 8);
+            let mut d = random_allocation(budget, &valid, &mut rng);
+            for _ in 0..20 {
+                if let Some(nd) = perturb(&d, &valid, &mut rng) {
+                    crate::prop_assert!(
+                        nd.iter().sum::<usize>() == budget,
+                        "budget broken: {nd:?}"
+                    );
+                    crate::prop_assert!(
+                        nd.iter().all(|x| valid.contains(x)),
+                        "invalid degree: {nd:?}"
+                    );
+                    crate::prop_assert!(
+                        nd.windows(2).all(|w| w[0] >= w[1]),
+                        "not sorted"
+                    );
+                    d = nd;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sa_close_to_exhaustive_small() {
+        let items = test_items(1, 6);
+        let model = ModelCost::qwen3_14b();
+        let cluster = small_cluster(8);
+        let f = interf(&model);
+        let best = exhaustive_best(&items, &model, &cluster, &f);
+        let sa = sort_initialized_sa(
+            &items,
+            &model,
+            &cluster,
+            &f,
+            SaParams::default(),
+            7,
+        );
+        assert!(
+            sa.makespan <= best.makespan * 1.05,
+            "SA {} vs optimal {}",
+            sa.makespan,
+            best.makespan
+        );
+    }
+
+    #[test]
+    fn sa_beats_or_matches_fixed_baselines() {
+        // The Fig. 16 claim: adaptive allocation >= both Fix-1 and Fix-8.
+        let items = test_items(2, 12);
+        let model = ModelCost::qwen3_14b();
+        let cluster = small_cluster(16);
+        let f = interf(&model);
+        let sa = sort_initialized_sa(
+            &items,
+            &model,
+            &cluster,
+            &f,
+            SaParams::default(),
+            3,
+        );
+        for k in [1, 8] {
+            let fixed =
+                evaluate(&fixed_allocation(16, k), &items, &model, &f);
+            assert!(
+                sa.makespan <= fixed.makespan * 1.001,
+                "SA {} worse than Fix-{k} {}",
+                sa.makespan,
+                fixed.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn sa_respects_min_mp() {
+        // Qwen3-32B cannot run MP=1 (min_mp = 2).
+        let items = test_items(3, 6);
+        let model = ModelCost::qwen3_32b();
+        let cluster = small_cluster(16);
+        let f = interf(&model);
+        let sa = sort_initialized_sa(
+            &items,
+            &model,
+            &cluster,
+            &f,
+            SaParams::default(),
+            5,
+        );
+        assert!(sa.degrees.iter().all(|&d| d >= 2), "{:?}", sa.degrees);
+        assert_eq!(sa.total_gpus(), 16);
+    }
+
+    #[test]
+    fn evaluate_maps_long_block_to_high_mp() {
+        let items = test_items(4, 8);
+        let model = ModelCost::qwen3_14b();
+        let f = interf(&model);
+        let a = evaluate(&[8, 4, 2, 1, 1], &items, &model, &f);
+        assert_eq!(a.degrees, vec![8, 4, 2, 1, 1]);
+        let times = a.token_times(&model);
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "{times:?}");
+        // Group 0 (longest trajectories) is on the MP-8 worker.
+        assert_eq!(a.partition.groups.len(), 5);
+    }
+
+    #[test]
+    fn sa_deterministic_per_seed() {
+        let items = test_items(5, 6);
+        let model = ModelCost::qwen3_8b();
+        let cluster = small_cluster(8);
+        let f = interf(&model);
+        let a = sort_initialized_sa(&items, &model, &cluster, &f,
+                                    SaParams::default(), 11);
+        let b = sort_initialized_sa(&items, &model, &cluster, &f,
+                                    SaParams::default(), 11);
+        assert_eq!(a.degrees, b.degrees);
+        assert_eq!(a.makespan, b.makespan);
+    }
+}

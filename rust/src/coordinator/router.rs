@@ -1,0 +1,273 @@
+//! Agentic trajectory router (paper §5.2 "Agentic Trajectory Router").
+//!
+//! Heddle's router enforces the control plane's partition decisions and
+//! keeps trajectory metadata (placement assignment, predicted length,
+//! presorted rank). The same component also implements the step-level
+//! routing *baselines* the paper evaluates against (Fig. 15 / §7):
+//! cache-aware pinning (Verl), least-load with a skew threshold (Slime),
+//! and the Verl* hybrid.
+
+use crate::config::PlacementKind;
+use std::collections::HashMap;
+
+/// Router bookkeeping: per-worker load + per-trajectory cache residency.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: PlacementKind,
+    /// Active + queued trajectories per worker (the load signal).
+    loads: Vec<usize>,
+    /// Worker currently holding each trajectory's prefix cache, plus the
+    /// cached token count.
+    cache: HashMap<usize, (usize, usize)>,
+    /// Heddle: the DP partition assignment (trajectory -> worker).
+    assignment: HashMap<usize, usize>,
+    /// Load-skew threshold for LeastLoad / Hybrid (paper: e.g. 32).
+    pub skew_threshold: f64,
+    /// Dispatch statistics.
+    pub dispatches: u64,
+    pub cache_hits: u64,
+}
+
+impl Router {
+    pub fn new(policy: PlacementKind, n_workers: usize) -> Self {
+        Router {
+            policy,
+            loads: vec![0; n_workers],
+            cache: HashMap::new(),
+            assignment: HashMap::new(),
+            skew_threshold: 32.0,
+            dispatches: 0,
+            cache_hits: 0,
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.loads.len()
+    }
+
+    pub fn loads(&self) -> &[usize] {
+        &self.loads
+    }
+
+    /// Install the Heddle partition (trajectory id -> worker).
+    pub fn set_assignment(&mut self, partition: &super::placement::Partition) {
+        self.assignment.clear();
+        for (w, group) in partition.groups.iter().enumerate() {
+            for &t in group {
+                self.assignment.insert(t, w);
+            }
+        }
+    }
+
+    /// Point lookup of the Heddle assignment.
+    pub fn assigned_worker(&self, traj_id: usize) -> Option<usize> {
+        self.assignment.get(&traj_id).copied()
+    }
+
+    /// Re-assign one trajectory (migration executed).
+    pub fn reassign(&mut self, traj_id: usize, worker: usize) {
+        self.assignment.insert(traj_id, worker);
+    }
+
+    /// Current load skew max/min (min clamped to 1).
+    pub fn load_skew(&self) -> f64 {
+        super::placement::load_skew(&self.loads)
+    }
+
+    fn least_loaded(&self) -> usize {
+        self.loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &l)| l)
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Worker with the longest cached prefix for this trajectory (falls
+    /// back to least-loaded when nothing is cached).
+    fn best_cache_worker(&self, traj_id: usize) -> (usize, bool) {
+        match self.cache.get(&traj_id) {
+            Some(&(w, len)) if len > 0 => (w, true),
+            _ => (self.least_loaded(), false),
+        }
+    }
+
+    /// Route one step request. Returns the chosen worker and whether the
+    /// dispatch hits the trajectory's prefix cache.
+    pub fn route_step(&mut self, traj_id: usize) -> (usize, bool) {
+        self.dispatches += 1;
+        let (worker, hit) = match self.policy {
+            PlacementKind::PresortedDp => {
+                // Heddle: strictly enforce the control-plane partition.
+                let w = self
+                    .assignment
+                    .get(&traj_id)
+                    .copied()
+                    .unwrap_or_else(|| self.least_loaded());
+                let hit = matches!(self.cache.get(&traj_id),
+                                   Some(&(cw, l)) if cw == w && l > 0);
+                (w, hit)
+            }
+            PlacementKind::CacheAware => {
+                // Pin to the cache owner forever (static assignment).
+                let (w, hit) = self.best_cache_worker(traj_id);
+                (w, hit)
+            }
+            PlacementKind::LeastLoad => {
+                // Slime's router: every step goes to the least-loaded
+                // worker, ignoring cache residency (the paper's
+                // "prohibitive recomputation" critique). Ties keep the
+                // cache worker when it is among the least loaded.
+                let min_load =
+                    self.loads.iter().copied().min().unwrap_or(0);
+                let w = match self.cache.get(&traj_id) {
+                    Some(&(cw, l)) if l > 0 && self.loads[cw] == min_load => {
+                        cw
+                    }
+                    _ => self.least_loaded(),
+                };
+                let hit = matches!(self.cache.get(&traj_id),
+                                   Some(&(cw, l)) if cw == w && l > 0);
+                (w, hit)
+            }
+            PlacementKind::Hybrid => {
+                if self.load_skew() > self.skew_threshold {
+                    let w = self.least_loaded();
+                    let hit = matches!(self.cache.get(&traj_id),
+                                       Some(&(cw, l)) if cw == w && l > 0);
+                    (w, hit)
+                } else {
+                    self.best_cache_worker(traj_id)
+                }
+            }
+        };
+        if hit {
+            self.cache_hits += 1;
+        }
+        (worker, hit)
+    }
+
+    /// Bookkeeping: a trajectory entered a worker's queue/active set.
+    pub fn on_enter(&mut self, worker: usize) {
+        self.loads[worker] += 1;
+    }
+
+    /// Bookkeeping: a trajectory left the worker (tool call / finished).
+    pub fn on_leave(&mut self, worker: usize) {
+        debug_assert!(self.loads[worker] > 0);
+        self.loads[worker] = self.loads[worker].saturating_sub(1);
+    }
+
+    /// The trajectory's KV prefix is now resident on `worker` with
+    /// `tokens` cached tokens.
+    pub fn set_cache(&mut self, traj_id: usize, worker: usize, tokens: usize) {
+        self.cache.insert(traj_id, (worker, tokens));
+    }
+
+    pub fn cache_of(&self, traj_id: usize) -> Option<(usize, usize)> {
+        self.cache.get(&traj_id).copied()
+    }
+
+    pub fn evict_cache(&mut self, traj_id: usize) {
+        self.cache.remove(&traj_id);
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.dispatches == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / self.dispatches as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::placement::Partition;
+
+    #[test]
+    fn cache_aware_pins() {
+        let mut r = Router::new(PlacementKind::CacheAware, 4);
+        let (w1, hit1) = r.route_step(7);
+        assert!(!hit1);
+        r.on_enter(w1);
+        r.set_cache(7, w1, 100);
+        // Even with the worker heavily loaded, the pin holds.
+        for _ in 0..10 {
+            r.on_enter(w1);
+        }
+        let (w2, hit2) = r.route_step(7);
+        assert_eq!(w2, w1);
+        assert!(hit2);
+    }
+
+    #[test]
+    fn least_load_breaks_pin_on_skew() {
+        let mut r = Router::new(PlacementKind::LeastLoad, 2);
+        r.skew_threshold = 4.0;
+        r.set_cache(7, 0, 100);
+        // Balanced: go to the cache.
+        let (w, hit) = r.route_step(7);
+        assert_eq!(w, 0);
+        assert!(hit);
+        // Skewed beyond threshold: go to the empty worker, lose cache.
+        for _ in 0..9 {
+            r.on_enter(0);
+        }
+        let (w, hit) = r.route_step(7);
+        assert_eq!(w, 1);
+        assert!(!hit);
+    }
+
+    #[test]
+    fn heddle_enforces_partition() {
+        let mut r = Router::new(PlacementKind::PresortedDp, 3);
+        let p = Partition {
+            groups: vec![vec![0], vec![1, 2], vec![3]],
+            makespan: 0.0,
+        };
+        r.set_assignment(&p);
+        assert_eq!(r.route_step(2).0, 1);
+        assert_eq!(r.route_step(0).0, 0);
+        assert_eq!(r.route_step(3).0, 2);
+        r.reassign(3, 0);
+        assert_eq!(r.route_step(3).0, 0);
+    }
+
+    #[test]
+    fn heddle_cache_hit_when_colocated() {
+        let mut r = Router::new(PlacementKind::PresortedDp, 2);
+        let p = Partition { groups: vec![vec![5], vec![]], makespan: 0.0 };
+        r.set_assignment(&p);
+        r.set_cache(5, 0, 64);
+        let (w, hit) = r.route_step(5);
+        assert_eq!(w, 0);
+        assert!(hit);
+        // Cache on the wrong worker (pre-migration): no hit.
+        r.set_cache(5, 1, 64);
+        let (_, hit) = r.route_step(5);
+        assert!(!hit);
+    }
+
+    #[test]
+    fn load_tracking() {
+        let mut r = Router::new(PlacementKind::LeastLoad, 2);
+        r.on_enter(0);
+        r.on_enter(0);
+        r.on_enter(1);
+        assert_eq!(r.loads(), &[2, 1]);
+        r.on_leave(0);
+        assert_eq!(r.loads(), &[1, 1]);
+        assert_eq!(r.load_skew(), 1.0);
+    }
+
+    #[test]
+    fn hit_rate_accounting() {
+        let mut r = Router::new(PlacementKind::CacheAware, 2);
+        let (w, _) = r.route_step(1);
+        r.set_cache(1, w, 10);
+        r.route_step(1);
+        r.route_step(1);
+        assert!((r.cache_hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,485 @@
+//! Trajectory-level scheduling (paper §4.2, Algorithm 1) and the Fig. 14
+//! baselines (FCFS, Round-Robin, Autellix-style SJF).
+//!
+//! Each rollout worker owns one [`SchedulerQueue`]: pending LLM
+//! generation requests ordered by the active policy, plus the preemption
+//! test of Algorithm 1 (a pending request that outranks the
+//! lowest-priority *active* request evicts it, persisting its KV cache).
+//!
+//! Progressive priority scheduling (PPS) approximates longest-
+//! processing-time-first: priority = predicted total trajectory length,
+//! re-assigned on every step as the progressive predictor refines its
+//! estimate.
+
+use crate::config::SchedulerKind;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A pending generation request (one agentic step of one trajectory).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepRequest {
+    pub traj_id: usize,
+    /// Predicted total trajectory length (tokens) — the PPS priority.
+    pub predicted_len: f64,
+    /// Monotone sequence number of this *request*.
+    pub seq: u64,
+    /// Sequence number of the trajectory's first-ever request.
+    pub first_seq: u64,
+}
+
+/// Effective priority: larger = runs earlier.
+fn rank(kind: SchedulerKind, r: &StepRequest) -> f64 {
+    match kind {
+        SchedulerKind::Pps => r.predicted_len,
+        SchedulerKind::Sjf => -r.predicted_len,
+        // FCFS: order by trajectory first arrival.
+        SchedulerKind::Fcfs => -(r.first_seq as f64),
+        // Round-robin: every returning step re-queues at the tail.
+        SchedulerKind::RoundRobin => -(r.seq as f64),
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct HeapEntry {
+    rank: f64,
+    /// Tie-break: earlier request wins (determinism + starvation bound).
+    seq: u64,
+    req: StepRequest,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.rank == other.rank && self.seq == other.seq
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.rank
+            .partial_cmp(&other.rank)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq)) // earlier seq first
+    }
+}
+
+/// Per-worker pending queue under a scheduling policy.
+#[derive(Debug)]
+pub struct SchedulerQueue {
+    kind: SchedulerKind,
+    heap: BinaryHeap<HeapEntry>,
+}
+
+impl SchedulerQueue {
+    pub fn new(kind: SchedulerKind) -> Self {
+        SchedulerQueue { kind, heap: BinaryHeap::new() }
+    }
+
+    pub fn kind(&self) -> SchedulerKind {
+        self.kind
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Enqueue a step request (Algorithm 1 lines 1-4: the priority is the
+    /// progressive prediction supplied by the caller).
+    pub fn push(&mut self, req: StepRequest) {
+        self.heap.push(HeapEntry { rank: rank(self.kind, &req), seq: req.seq, req });
+    }
+
+    /// Highest-priority pending request, if any.
+    pub fn peek(&self) -> Option<&StepRequest> {
+        self.heap.peek().map(|e| &e.req)
+    }
+
+    pub fn pop(&mut self) -> Option<StepRequest> {
+        self.heap.pop().map(|e| e.req)
+    }
+
+    /// Algorithm 1 lines 6-10: should the top pending request preempt an
+    /// active request whose priority (predicted length) is
+    /// `active_min_predicted`? Only PPS preempts; the baselines run
+    /// requests to step completion. A 2x margin guards against
+    /// prediction-noise churn: evicting an active request costs a slot
+    /// swap, so the pending one must be *materially* longer.
+    pub fn should_preempt(&self, active_min_predicted: f64) -> bool {
+        const PREEMPT_MARGIN: f64 = 2.0;
+        if self.kind != SchedulerKind::Pps {
+            return false;
+        }
+        match self.heap.peek() {
+            Some(top) => top.rank > active_min_predicted * PREEMPT_MARGIN,
+            None => false,
+        }
+    }
+
+    /// Remove every queued request of a trajectory (migration takes the
+    /// trajectory to another worker's queue).
+    pub fn remove_trajectory(&mut self, traj_id: usize) -> Vec<StepRequest> {
+        let mut removed = Vec::new();
+        let entries: Vec<HeapEntry> = std::mem::take(&mut self.heap).into_vec();
+        for e in entries {
+            if e.req.traj_id == traj_id {
+                removed.push(e.req);
+            } else {
+                self.heap.push(e);
+            }
+        }
+        removed
+    }
+
+    /// Drain in priority order (diagnostics / tests).
+    pub fn drain_ordered(&mut self) -> Vec<StepRequest> {
+        let mut out = Vec::with_capacity(self.heap.len());
+        while let Some(e) = self.heap.pop() {
+            out.push(e.req);
+        }
+        out
+    }
+}
+
+/// The active set of one worker (requests currently decoding). Tracks
+/// the minimum-priority member for the preemption test.
+#[derive(Debug, Default)]
+pub struct ActiveSet {
+    /// (traj_id, predicted_len)
+    members: Vec<(usize, f64)>,
+}
+
+impl ActiveSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn contains(&self, traj_id: usize) -> bool {
+        self.members.iter().any(|m| m.0 == traj_id)
+    }
+
+    pub fn insert(&mut self, traj_id: usize, predicted_len: f64) {
+        debug_assert!(!self.contains(traj_id));
+        self.members.push((traj_id, predicted_len));
+    }
+
+    pub fn remove(&mut self, traj_id: usize) -> bool {
+        if let Some(i) = self.members.iter().position(|m| m.0 == traj_id) {
+            self.members.swap_remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Update a member's priority after a progressive-prediction refresh.
+    pub fn update_priority(&mut self, traj_id: usize, predicted_len: f64) {
+        if let Some(m) =
+            self.members.iter_mut().find(|m| m.0 == traj_id)
+        {
+            m.1 = predicted_len;
+        }
+    }
+
+    /// Lowest-priority active member (the preemption victim r_min).
+    pub fn min_member(&self) -> Option<(usize, f64)> {
+        self.members
+            .iter()
+            .copied()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal))
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = usize> + '_ {
+        self.members.iter().map(|m| m.0)
+    }
+}
+
+/// One preemption decision produced by [`schedule_worker`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScheduleAction {
+    /// Promote the top pending request into a free slot.
+    Admit(StepRequest),
+    /// Evict this active trajectory (persist KV), then admit the request.
+    PreemptAndAdmit { victim: usize, req: StepRequest },
+    /// Nothing to do.
+    Idle,
+}
+
+/// Algorithm 1's per-invocation decision for one worker: fill free slots
+/// first; otherwise preempt if the policy allows it.
+pub fn schedule_worker(
+    queue: &mut SchedulerQueue,
+    active: &ActiveSet,
+    max_slots: usize,
+    preemption_enabled: bool,
+) -> ScheduleAction {
+    if queue.is_empty() {
+        return ScheduleAction::Idle;
+    }
+    if active.len() < max_slots {
+        let req = queue.pop().unwrap();
+        return ScheduleAction::Admit(req);
+    }
+    if preemption_enabled {
+        if let Some((victim, vprio)) = active.min_member() {
+            if queue.should_preempt(vprio) {
+                let req = queue.pop().unwrap();
+                return ScheduleAction::PreemptAndAdmit { victim, req };
+            }
+        }
+    }
+    ScheduleAction::Idle
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+
+    fn req(traj_id: usize, pred: f64, seq: u64) -> StepRequest {
+        StepRequest { traj_id, predicted_len: pred, seq, first_seq: seq }
+    }
+
+    #[test]
+    fn pps_orders_longest_first() {
+        let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+        q.push(req(1, 100.0, 0));
+        q.push(req(2, 900.0, 1));
+        q.push(req(3, 400.0, 2));
+        let order: Vec<usize> =
+            q.drain_ordered().iter().map(|r| r.traj_id).collect();
+        assert_eq!(order, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn sjf_orders_shortest_first() {
+        let mut q = SchedulerQueue::new(SchedulerKind::Sjf);
+        q.push(req(1, 100.0, 0));
+        q.push(req(2, 900.0, 1));
+        q.push(req(3, 400.0, 2));
+        let order: Vec<usize> =
+            q.drain_ordered().iter().map(|r| r.traj_id).collect();
+        assert_eq!(order, vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn rr_is_request_fifo() {
+        let mut q = SchedulerQueue::new(SchedulerKind::RoundRobin);
+        q.push(req(5, 900.0, 10));
+        q.push(req(6, 100.0, 11));
+        let order: Vec<usize> =
+            q.drain_ordered().iter().map(|r| r.traj_id).collect();
+        assert_eq!(order, vec![5, 6], "RR ignores predictions");
+    }
+
+    #[test]
+    fn fcfs_orders_by_trajectory_arrival() {
+        let mut q = SchedulerQueue::new(SchedulerKind::Fcfs);
+        // Trajectory 9 arrived first (first_seq 0) but this step request
+        // is late (seq 20); FCFS still favours it.
+        q.push(StepRequest { traj_id: 9, predicted_len: 1.0, seq: 20, first_seq: 0 });
+        q.push(StepRequest { traj_id: 8, predicted_len: 9.0, seq: 11, first_seq: 11 });
+        let order: Vec<usize> =
+            q.drain_ordered().iter().map(|r| r.traj_id).collect();
+        assert_eq!(order, vec![9, 8]);
+    }
+
+    #[test]
+    fn pps_tie_break_is_fifo() {
+        let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+        q.push(req(1, 500.0, 3));
+        q.push(req(2, 500.0, 1));
+        q.push(req(3, 500.0, 2));
+        let order: Vec<usize> =
+            q.drain_ordered().iter().map(|r| r.traj_id).collect();
+        assert_eq!(order, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn preemption_only_for_pps_and_only_when_outranked() {
+        let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+        q.push(req(1, 800.0, 0));
+        assert!(q.should_preempt(300.0), "2x-longer pending must preempt");
+        assert!(!q.should_preempt(500.0), "within the 2x margin: no churn");
+        assert!(!q.should_preempt(800.0), "equal priority must not thrash");
+        assert!(!q.should_preempt(900.0));
+        let mut rr = SchedulerQueue::new(SchedulerKind::RoundRobin);
+        rr.push(req(1, 800.0, 0));
+        assert!(!rr.should_preempt(0.0), "baselines never preempt");
+    }
+
+    #[test]
+    fn schedule_worker_admits_into_free_slot() {
+        let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+        q.push(req(1, 100.0, 0));
+        let active = ActiveSet::new();
+        match schedule_worker(&mut q, &active, 4, true) {
+            ScheduleAction::Admit(r) => assert_eq!(r.traj_id, 1),
+            other => panic!("expected admit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn schedule_worker_preempts_victim() {
+        let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+        q.push(req(9, 1000.0, 5));
+        let mut active = ActiveSet::new();
+        active.insert(1, 50.0);
+        active.insert(2, 700.0);
+        match schedule_worker(&mut q, &active, 2, true) {
+            ScheduleAction::PreemptAndAdmit { victim, req } => {
+                assert_eq!(victim, 1, "lowest-priority active is evicted");
+                assert_eq!(req.traj_id, 9);
+            }
+            other => panic!("expected preempt, got {other:?}"),
+        }
+        // With preemption disabled: idle.
+        q.push(req(9, 1000.0, 6));
+        assert_eq!(
+            schedule_worker(&mut q, &active, 2, false),
+            ScheduleAction::Idle
+        );
+    }
+
+    #[test]
+    fn remove_trajectory_for_migration() {
+        let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+        q.push(req(1, 10.0, 0));
+        q.push(req(2, 20.0, 1));
+        q.push(req(1, 30.0, 2));
+        let removed = q.remove_trajectory(1);
+        assert_eq!(removed.len(), 2);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.peek().unwrap().traj_id, 2);
+    }
+
+    #[test]
+    fn active_set_min_and_update() {
+        let mut a = ActiveSet::new();
+        a.insert(1, 100.0);
+        a.insert(2, 50.0);
+        a.insert(3, 200.0);
+        assert_eq!(a.min_member(), Some((2, 50.0)));
+        a.update_priority(2, 500.0);
+        assert_eq!(a.min_member(), Some((1, 100.0)));
+        assert!(a.remove(1));
+        assert!(!a.remove(1));
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn property_queue_conserves_requests() {
+        check("queue_conserves_requests", 40, |g| {
+            let mut rng = g.rng();
+            let kinds = [
+                SchedulerKind::Pps,
+                SchedulerKind::Fcfs,
+                SchedulerKind::RoundRobin,
+                SchedulerKind::Sjf,
+            ];
+            let kind = *rng.choose(&kinds);
+            let mut q = SchedulerQueue::new(kind);
+            let n = g.size;
+            for i in 0..n {
+                q.push(req(i, rng.lognormal(5.0, 1.0), i as u64));
+            }
+            let drained = q.drain_ordered();
+            crate::prop_assert!(
+                drained.len() == n,
+                "lost requests: {} != {n}",
+                drained.len()
+            );
+            let mut ids: Vec<usize> =
+                drained.iter().map(|r| r.traj_id).collect();
+            ids.sort();
+            crate::prop_assert!(
+                ids == (0..n).collect::<Vec<_>>(),
+                "ids not conserved"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_pps_drain_is_sorted_desc() {
+        check("pps_drain_sorted", 40, |g| {
+            let mut rng = g.rng();
+            let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+            for i in 0..g.size {
+                q.push(req(i, rng.lognormal(5.0, 1.5), i as u64));
+            }
+            let order = q.drain_ordered();
+            for w in order.windows(2) {
+                crate::prop_assert!(
+                    w[0].predicted_len >= w[1].predicted_len,
+                    "PPS order violated"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_preemption_conserves_trajectories() {
+        // Simulate a worker loop: every trajectory pushed must end up
+        // either active or re-queued, never dropped.
+        check("preemption_conserves", 30, |g| {
+            let mut rng = g.rng();
+            let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+            let mut active = ActiveSet::new();
+            let slots = 1 + rng.usize(4);
+            let n = 2 + g.size;
+            for i in 0..n {
+                q.push(req(i, rng.lognormal(5.0, 1.5), i as u64));
+            }
+            let mut safety = 0;
+            loop {
+                safety += 1;
+                if safety > 10 * n {
+                    return Err("scheduler livelock".into());
+                }
+                match schedule_worker(&mut q, &active, slots, true) {
+                    ScheduleAction::Admit(r) => {
+                        active.insert(r.traj_id, r.predicted_len);
+                    }
+                    ScheduleAction::PreemptAndAdmit { victim, req } => {
+                        active.remove(victim);
+                        // Victim re-queues with its old (low) priority so
+                        // the loop terminates.
+                        q.push(StepRequest {
+                            traj_id: victim,
+                            predicted_len: 0.0,
+                            seq: 1_000_000 + safety as u64,
+                            first_seq: victim as u64,
+                        });
+                        active.insert(req.traj_id, req.predicted_len);
+                    }
+                    ScheduleAction::Idle => break,
+                }
+            }
+            let total = active.len() + q.len();
+            crate::prop_assert!(
+                total == n,
+                "trajectories lost: active {} + queued {} != {n}",
+                active.len(),
+                q.len()
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,25 @@
+//! # Heddle — trajectory-centric orchestration for agentic RL rollout
+//!
+//! Reproduction of *"Heddle: A Distributed Orchestration System for
+//! Agentic RL Rollout"* (2026) as a three-layer Rust + JAX + Pallas
+//! stack: Python authors and AOT-compiles the model/kernels once
+//! (`make artifacts`); the Rust coordinator, simulator, and serving path
+//! never touch Python at runtime.
+//!
+//! See DESIGN.md for the system inventory and experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod metrics;
+pub mod model;
+pub mod predictor;
+pub mod rl;
+pub mod runtime;
+pub mod testkit;
+pub mod tools;
+pub mod util;
+pub mod serve;
+pub mod sim;
+pub mod workload;

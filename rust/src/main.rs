@@ -1,0 +1,226 @@
+//! `heddle` — CLI launcher for the Heddle reproduction.
+//!
+//! Subcommands:
+//!   serve      run a real-model rollout batch through the full stack
+//!   simulate   run the paper-scale cluster simulation (one policy)
+//!   train      run the GRPO outer loop (rollout+inference+training)
+//!   profile    profile the PJRT decode path, print interference table
+//!   bench-figN / bench-tableN / bench-ablation   regenerate results
+//!
+//! Flags go AFTER positional args: `heddle simulate --gpus 64 --prompts 400`.
+
+use heddle::config::{ModelCost, PolicyConfig, SimConfig};
+use heddle::figures as figs;
+use heddle::predictor::history_workload;
+use heddle::sim::simulate;
+use heddle::util::cli::Args;
+use heddle::workload::{generate, Domain, WorkloadConfig};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let params = figs::FigParams {
+        gpus: args.get_usize("gpus", 16),
+        prompts: args.get_usize("prompts", 100),
+        seed: args.get_u64("seed", 1),
+    };
+    match cmd {
+        "serve" => {
+            let engine = heddle::runtime::Engine::load(Path::new(
+                args.get_or("artifacts", "artifacts"),
+            ))?;
+            let policy =
+                PolicyConfig::by_name(args.get_or("policy", "heddle"), 1)
+                    .ok_or_else(|| anyhow::anyhow!("unknown policy"))?;
+            let cfg = heddle::serve::ServeConfig {
+                n_workers: args.get_usize("workers", 4),
+                max_batch: args.get_usize("batch", 8),
+                policy,
+                seed: params.seed,
+                ..Default::default()
+            };
+            let domain = Domain::parse(args.get_or("domain", "coding"))
+                .ok_or_else(|| anyhow::anyhow!("bad domain"))?;
+            let mut wl = WorkloadConfig::new(
+                domain,
+                args.get_usize("prompts", 4),
+                params.seed,
+            );
+            wl.group_size = args.get_usize("group", 8);
+            let specs = generate(&wl);
+            let history = history_workload(domain, params.seed);
+            let out =
+                heddle::serve::serve_rollout(&engine, &cfg, &history, &specs)?;
+            println!("{}", out.report.summary("serve"));
+            println!(
+                "wall={:.2}s tokens={} throughput={:.1} tok/s",
+                out.wall_seconds,
+                out.tokens_generated,
+                out.throughput()
+            );
+        }
+        "simulate" => {
+            let model = ModelCost::by_name(args.get_or("model", "qwen3-14b"))
+                .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+            let policy = PolicyConfig::by_name(
+                args.get_or("policy", "heddle"),
+                model.min_mp,
+            )
+            .ok_or_else(|| anyhow::anyhow!("unknown policy"))?;
+            let domain = Domain::parse(args.get_or("domain", "coding"))
+                .ok_or_else(|| anyhow::anyhow!("bad domain"))?;
+            let mut cfg = SimConfig::default();
+            cfg.cluster.n_gpus = params.gpus;
+            cfg.model = model;
+            cfg.policy = policy;
+            cfg.seed = params.seed;
+            let specs = generate(&WorkloadConfig::new(
+                domain,
+                params.prompts,
+                params.seed,
+            ));
+            let history = history_workload(domain, params.seed);
+            let r = simulate(&cfg, &history, &specs);
+            println!("{}", r.summary(args.get_or("policy", "heddle")));
+        }
+        "train" => {
+            let mut cfg = SimConfig::default();
+            cfg.cluster.n_gpus = params.gpus;
+            cfg.policy =
+                PolicyConfig::by_name(args.get_or("policy", "heddle"), 1)
+                    .ok_or_else(|| anyhow::anyhow!("unknown policy"))?;
+            cfg.seed = params.seed;
+            let steps = heddle::rl::train(
+                &cfg,
+                Domain::parse(args.get_or("domain", "coding")).unwrap(),
+                args.get_usize("prompts", 32),
+                args.get_usize("steps", 3),
+            );
+            for s in &steps {
+                println!(
+                    "step {}: rollout={:.1}s ({:.0}% of step) \
+                     inference={:.1}s training={:.1}s |adv|={:.3}",
+                    s.step,
+                    s.rollout.makespan,
+                    s.rollout_fraction() * 100.0,
+                    s.inference_s,
+                    s.training_s,
+                    s.mean_abs_advantage
+                );
+            }
+        }
+        "profile" => {
+            let engine = heddle::runtime::Engine::load(Path::new(
+                args.get_or("artifacts", "artifacts"),
+            ))?;
+            let prof = heddle::runtime::profiler::profile_decode(
+                &engine,
+                args.get_usize("steps", 20),
+                args.get_usize("warmup", 3),
+            )?;
+            println!("decode profile (real PJRT path):");
+            println!("  batch  per-token(ms)  interference");
+            for (b, t, f) in prof.rows() {
+                println!("  {b:5}  {:12.3}  {f:10.3}", t * 1e3);
+            }
+        }
+        "bench-fig2" => {
+            for d in Domain::ALL {
+                let f = figs::fig2(d, &params);
+                println!(
+                    "Fig.2 {:7} tokens p50={:.0} p99={:.0} ({:.1}x) | \
+                     tool p50={:.2}s p99={:.2}s",
+                    d.name(),
+                    f.token_p50,
+                    f.token_p99,
+                    f.token_p99 / f.token_p50,
+                    f.tool_p50,
+                    f.tool_p99
+                );
+            }
+        }
+        "bench-fig4" => {
+            let f = figs::fig4(&params);
+            println!(
+                "Fig.4 max/median completion = {:.2}x; normalized CDF:",
+                f.max_over_median
+            );
+            for (v, q) in f.cdf.iter().step_by(4) {
+                println!("  {:4.0}% <= {:.2}", q * 100.0, v);
+            }
+        }
+        "bench-fig5" => {
+            let f = figs::fig5(&params);
+            println!(
+                "Fig.5 mean intra-group max/min = {:.1}x over {} prompts",
+                f.mean_max_over_min,
+                f.groups.len()
+            );
+        }
+        "bench-fig6" => {
+            let f = figs::fig6();
+            for (model, pts) in &f.rows {
+                let s: Vec<String> = pts
+                    .iter()
+                    .map(|(b, t, _)| format!("{b}:{:.1}ms", t * 1e3))
+                    .collect();
+                println!("Fig.6 {model}: {}", s.join(" "));
+            }
+        }
+        "bench-fig7" => {
+            let f = figs::fig7(params.gpus.min(8));
+            for (label, lat, tp) in &f.rows {
+                println!(
+                    "Fig.7 {label}: per-token {:.1} ms | \
+                     agg throughput {:.0} tok/s",
+                    lat * 1e3,
+                    tp
+                );
+            }
+        }
+        "bench-fig12" => {
+            let models = [
+                ModelCost::qwen3_8b(),
+                ModelCost::qwen3_14b(),
+                ModelCost::qwen3_32b(),
+            ];
+            figs::print_fig12(&figs::fig12(&params, &models));
+        }
+        "bench-fig13" => figs::print_fig13(&figs::fig13(&params)),
+        "bench-fig14" => figs::print_fig14(&figs::fig14(&params)),
+        "bench-fig15" => figs::print_fig15(&figs::fig15(&params)),
+        "bench-fig16" => figs::print_fig16(&figs::fig16(&params)),
+        "bench-table1" => figs::print_table1(&figs::table1(&params)),
+        "bench-table2" => figs::print_table2(&figs::table2(
+            args.get_usize("n", 6400),
+            args.get_usize("m", 16),
+            params.seed,
+        )),
+        "bench-ablation" => {
+            println!("DP aggregation ablation (n=6400, m=16):");
+            for r in figs::ablation_aggregation(
+                args.get_usize("n", 6400),
+                args.get_usize("m", 16),
+                params.seed,
+            ) {
+                println!("  {:28} {:10.3} {}", r.name, r.value, r.unit);
+            }
+            println!("SA vs fixed allocations:");
+            for r in figs::ablation_sa_quality(params.seed) {
+                println!("  {:28} {:10.3} {}", r.name, r.value, r.unit);
+            }
+        }
+        _ => {
+            println!(
+                "usage: heddle <serve|simulate|train|profile|bench-fig2|\
+                 bench-fig4|bench-fig5|bench-fig6|bench-fig7|bench-fig12|\
+                 bench-fig13|bench-fig14|bench-fig15|bench-fig16|\
+                 bench-table1|bench-table2|bench-ablation>\n\
+                 flags: --gpus N --prompts N --seed N --model qwen3-14b \
+                 --policy heddle|verl|verl*|slime --domain coding|search|math"
+            );
+        }
+    }
+    Ok(())
+}

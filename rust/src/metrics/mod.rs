@@ -1,0 +1,178 @@
+//! Runtime telemetry (paper §3 "Runtime Telemetry"): per-trajectory
+//! accounting that decomposes completion time into the Formula-1 terms —
+//! queueing delay, generation time, and tool time — plus cluster-level
+//! throughput. Both the simulator and the real serving path emit these.
+
+use crate::util::stats;
+
+/// Per-trajectory record, filled in as the trajectory executes.
+#[derive(Debug, Clone, Default)]
+pub struct TrajectoryMetrics {
+    pub id: usize,
+    pub submit_time: f64,
+    pub finish_time: f64,
+    /// Sum of queueing delays across all steps (the paper's per-
+    /// trajectory T_queue: "the sum of the queueing delays incurred
+    /// across all its steps").
+    pub queue_delay: f64,
+    /// Time spent actually decoding/prefilling on a worker.
+    pub gpu_time: f64,
+    /// Time blocked on tool execution.
+    pub tool_time: f64,
+    pub tokens_generated: usize,
+    pub steps: usize,
+    pub migrations: usize,
+    /// Total KV-transfer seconds spent migrating this trajectory.
+    pub migration_seconds: f64,
+    pub preemptions: usize,
+    /// Prefill tokens recomputed due to cache misses (placement quality).
+    pub recomputed_tokens: usize,
+}
+
+impl TrajectoryMetrics {
+    pub fn completion_time(&self) -> f64 {
+        self.finish_time - self.submit_time
+    }
+}
+
+/// Aggregated rollout metrics for one batch (one RL step's rollout phase).
+#[derive(Debug, Clone, Default)]
+pub struct RolloutReport {
+    pub trajectories: Vec<TrajectoryMetrics>,
+    /// Rollout makespan: submit of first to finish of last (seconds).
+    pub makespan: f64,
+    pub total_tokens: usize,
+    pub total_migrations: usize,
+    pub total_preemptions: usize,
+    pub total_recomputed_tokens: usize,
+}
+
+impl RolloutReport {
+    pub fn from_trajectories(ts: Vec<TrajectoryMetrics>) -> Self {
+        let start = ts
+            .iter()
+            .map(|t| t.submit_time)
+            .fold(f64::INFINITY, f64::min);
+        let end = ts
+            .iter()
+            .map(|t| t.finish_time)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let total_tokens = ts.iter().map(|t| t.tokens_generated).sum();
+        let total_migrations = ts.iter().map(|t| t.migrations).sum();
+        let total_preemptions = ts.iter().map(|t| t.preemptions).sum();
+        let total_recomputed_tokens =
+            ts.iter().map(|t| t.recomputed_tokens).sum();
+        RolloutReport {
+            makespan: if ts.is_empty() { 0.0 } else { end - start },
+            trajectories: ts,
+            total_tokens,
+            total_migrations,
+            total_preemptions,
+            total_recomputed_tokens,
+        }
+    }
+
+    /// End-to-end rollout throughput, tokens/s — the paper's headline
+    /// metric (Fig. 12).
+    pub fn throughput(&self) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.total_tokens as f64 / self.makespan
+    }
+
+    pub fn completion_times(&self) -> Vec<f64> {
+        self.trajectories.iter().map(|t| t.completion_time()).collect()
+    }
+
+    /// Queueing delay of the trajectory with the longest completion time
+    /// (the paper's Fig. 14 right panel).
+    pub fn longest_trajectory_queue_delay(&self) -> f64 {
+        self.trajectories
+            .iter()
+            .max_by(|a, b| {
+                a.completion_time().partial_cmp(&b.completion_time()).unwrap()
+            })
+            .map(|t| t.queue_delay)
+            .unwrap_or(0.0)
+    }
+
+    pub fn mean_queue_delay(&self) -> f64 {
+        let q: Vec<f64> =
+            self.trajectories.iter().map(|t| t.queue_delay).collect();
+        stats::mean(&q)
+    }
+
+    /// max/median completion-time ratio (Fig. 4's tail severity).
+    pub fn tail_ratio(&self) -> f64 {
+        let ct = self.completion_times();
+        stats::max(&ct) / stats::percentile(&ct, 0.5)
+    }
+
+    pub fn summary(&self, label: &str) -> String {
+        format!(
+            "{label}: makespan={} throughput={:.0} tok/s tail_ratio={:.2} \
+             mean_queue={} migrations={} preemptions={}",
+            crate::util::fmt_secs(self.makespan),
+            self.throughput(),
+            self.tail_ratio(),
+            crate::util::fmt_secs(self.mean_queue_delay()),
+            self.total_migrations,
+            self.total_preemptions,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(id: usize, submit: f64, finish: f64, tokens: usize) -> TrajectoryMetrics {
+        TrajectoryMetrics {
+            id,
+            submit_time: submit,
+            finish_time: finish,
+            tokens_generated: tokens,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let r = RolloutReport::from_trajectories(vec![
+            t(0, 0.0, 10.0, 100),
+            t(1, 0.0, 40.0, 400),
+            t(2, 5.0, 20.0, 100),
+        ]);
+        assert_eq!(r.makespan, 40.0);
+        assert_eq!(r.total_tokens, 600);
+        assert!((r.throughput() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn longest_trajectory_queue() {
+        let mut a = t(0, 0.0, 10.0, 1);
+        a.queue_delay = 1.0;
+        let mut b = t(1, 0.0, 50.0, 1);
+        b.queue_delay = 33.0;
+        let r = RolloutReport::from_trajectories(vec![a, b]);
+        assert_eq!(r.longest_trajectory_queue_delay(), 33.0);
+    }
+
+    #[test]
+    fn tail_ratio() {
+        let r = RolloutReport::from_trajectories(vec![
+            t(0, 0.0, 10.0, 1),
+            t(1, 0.0, 10.0, 1),
+            t(2, 0.0, 50.0, 1),
+        ]);
+        assert!((r.tail_ratio() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_report() {
+        let r = RolloutReport::from_trajectories(vec![]);
+        assert_eq!(r.makespan, 0.0);
+        assert_eq!(r.throughput(), 0.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Rust-side model utilities for the real serving path: sampling and
+//! synthetic token streams.
+//!
+//! The serving examples replay [`TrajectorySpec`]s — segment lengths and
+//! tool behaviour come from the spec so policy comparisons are paired —
+//! but the *tokens themselves* are genuinely produced by the model:
+//! logits from the PJRT decode step, temperature + nucleus sampling here.
+
+use crate::util::rng::Rng;
+
+/// Temperature + top-p (nucleus) sampling over a logits row.
+/// Matches the paper's rollout hyperparameters (T=1.0, top_p=0.9).
+pub fn sample_top_p(
+    logits: &[f32],
+    temperature: f64,
+    top_p: f64,
+    rng: &mut Rng,
+) -> usize {
+    debug_assert!(!logits.is_empty());
+    if temperature <= 1e-6 {
+        // Greedy.
+        return argmax(logits);
+    }
+    // Softmax with temperature (stable).
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<(usize, f64)> = logits
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| (i, (((l - max) as f64) / temperature).exp()))
+        .collect();
+    let z: f64 = probs.iter().map(|p| p.1).sum();
+    for p in &mut probs {
+        p.1 /= z;
+    }
+    // Nucleus: keep the smallest prefix of sorted probs covering top_p.
+    probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut acc = 0.0;
+    let mut cut = probs.len();
+    for (i, p) in probs.iter().enumerate() {
+        acc += p.1;
+        if acc >= top_p {
+            cut = i + 1;
+            break;
+        }
+    }
+    probs.truncate(cut);
+    let z: f64 = probs.iter().map(|p| p.1).sum();
+    let mut r = rng.f64() * z;
+    for (i, p) in &probs {
+        r -= p;
+        if r <= 0.0 {
+            return *i;
+        }
+    }
+    probs.last().map(|p| p.0).unwrap_or(0)
+}
+
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Deterministic synthetic token for prompts / tool outputs: hashes
+/// (seed, trajectory, position) into [2, vocab). Ids 0/1 are reserved
+/// (pad / bos by convention).
+pub fn synth_token(seed: u64, traj: usize, pos: usize, vocab: usize) -> i32 {
+    let mut h = seed
+        .wrapping_mul(0x9e3779b97f4a7c15)
+        .wrapping_add(traj as u64)
+        .wrapping_mul(0xbf58476d1ce4e5b9)
+        .wrapping_add(pos as u64);
+    h ^= h >> 31;
+    h = h.wrapping_mul(0x94d049bb133111eb);
+    h ^= h >> 29;
+    (2 + (h % (vocab as u64 - 2))) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_at_zero_temperature() {
+        let logits = vec![0.1, 3.0, -1.0, 2.9];
+        let mut rng = Rng::new(0);
+        for _ in 0..10 {
+            assert_eq!(sample_top_p(&logits, 0.0, 0.9, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn top_p_excludes_tail() {
+        // One dominant logit: with tight top_p only it survives.
+        let mut logits = vec![0.0f32; 100];
+        logits[42] = 20.0;
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            assert_eq!(sample_top_p(&logits, 1.0, 0.9, &mut rng), 42);
+        }
+    }
+
+    #[test]
+    fn samples_within_vocab_and_varied() {
+        let logits: Vec<f32> = (0..64).map(|i| (i % 7) as f32 * 0.3).collect();
+        let mut rng = Rng::new(2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let t = sample_top_p(&logits, 1.0, 0.95, &mut rng);
+            assert!(t < 64);
+            seen.insert(t);
+        }
+        assert!(seen.len() > 5, "sampling collapsed: {seen:?}");
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        // Two tokens with 2:1 odds; frequency should reflect it.
+        let logits = vec![(2.0f32).ln(), 0.0];
+        let mut rng = Rng::new(3);
+        let n = 3000;
+        let ones = (0..n)
+            .filter(|_| sample_top_p(&logits, 1.0, 1.0, &mut rng) == 0)
+            .count();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 2.0 / 3.0).abs() < 0.04, "frac={frac}");
+    }
+
+    #[test]
+    fn synth_token_deterministic_in_range() {
+        for traj in 0..20 {
+            for pos in 0..50 {
+                let a = synth_token(7, traj, pos, 2048);
+                let b = synth_token(7, traj, pos, 2048);
+                assert_eq!(a, b);
+                assert!((2..2048).contains(&a));
+            }
+        }
+        assert_ne!(synth_token(7, 0, 0, 2048), synth_token(8, 0, 0, 2048));
+    }
+}

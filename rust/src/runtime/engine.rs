@@ -1,0 +1,376 @@
+//! PJRT model engine: loads the AOT artifacts once and serves decode /
+//! extend / predictor executions from the Rust hot path.
+//!
+//! HLO **text** artifacts are parsed with `HloModuleProto::from_text_file`
+//! and compiled on the CPU PJRT client (see /opt/xla-example/README.md for
+//! why text, not serialized protos). Weights are loaded from
+//! `weights.npz` once and passed as leading arguments on every call — the
+//! artifacts stay weight-free so they remain small and diffable.
+//!
+//! The CPU PJRT client returns multi-result computations as a single
+//! tuple buffer (no untupling), so each step round-trips the KV cache
+//! through host literals. Per-trajectory KV therefore lives on the host
+//! ([`KvStore`]) — which is exactly what preemption ("persist KV"),
+//! tool-call departures, and migration need anyway. The measured cost is
+//! part of the profiler output (EXPERIMENTS.md §Perf).
+
+use super::manifest::{ExeKind, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use xla::{FromRawBytes, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// One trajectory's host-resident KV cache: `[L, Hkv, S, D]` for K and V.
+#[derive(Debug, Clone)]
+pub struct TrajKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Valid tokens in the ring.
+    pub len: usize,
+}
+
+impl TrajKv {
+    pub fn empty(floats: usize) -> Self {
+        TrajKv { k: vec![0.0; floats], v: vec![0.0; floats], len: 0 }
+    }
+
+    /// Bytes this cache occupies (both K and V) — migration volume.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+/// Result of one decode step.
+#[derive(Debug)]
+pub struct DecodeOut {
+    /// `[B, vocab]` row-major logits.
+    pub logits: Vec<f32>,
+    pub vocab: usize,
+}
+
+impl DecodeOut {
+    pub fn row(&self, b: usize) -> &[f32] {
+        &self.logits[b * self.vocab..(b + 1) * self.vocab]
+    }
+}
+
+pub struct Engine {
+    pub manifest: Manifest,
+    #[allow(dead_code)]
+    client: PjRtClient,
+    weights: Vec<Literal>,
+    pred_weights: Vec<Literal>,
+    decode_exes: BTreeMap<usize, PjRtLoadedExecutable>,
+    extend_exes: BTreeMap<(usize, usize), PjRtLoadedExecutable>,
+    predictor_exes: BTreeMap<usize, PjRtLoadedExecutable>,
+    /// (l, b) -> flat offset of a [Hkv*S*D] block inside [L,B,Hkv,S,D].
+    kv_block: usize,
+}
+
+impl Engine {
+    /// Load `artifacts/` and compile every executable on the CPU client.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu()?;
+
+        let npz = Literal::read_npz(&manifest.weights_file, &())?;
+        let mut by_name: HashMap<String, Literal> = npz.into_iter().collect();
+        let weights: Vec<Literal> = manifest
+            .weight_order
+            .iter()
+            .map(|n| {
+                by_name
+                    .remove(n)
+                    .with_context(|| format!("weight {n} missing from npz"))
+            })
+            .collect::<Result<_>>()?;
+        let pred_weights: Vec<Literal> = manifest
+            .pred_order
+            .iter()
+            .map(|n| {
+                by_name
+                    .remove(n)
+                    .with_context(|| format!("weight {n} missing from npz"))
+            })
+            .collect::<Result<_>>()?;
+
+        let mut decode_exes = BTreeMap::new();
+        let mut extend_exes = BTreeMap::new();
+        let mut predictor_exes = BTreeMap::new();
+        for e in &manifest.executables {
+            let proto = xla::HloModuleProto::from_text_file(
+                e.file.to_str().context("non-utf8 path")?,
+            )?;
+            let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+            match e.kind {
+                ExeKind::Decode => {
+                    decode_exes.insert(e.batch, exe);
+                }
+                ExeKind::Extend => {
+                    extend_exes.insert((e.batch, e.chunk), exe);
+                }
+                ExeKind::Predictor => {
+                    predictor_exes.insert(e.batch, exe);
+                }
+            }
+        }
+        let m = &manifest.model;
+        let kv_block = m.n_kv_heads * m.max_seq * m.head_dim;
+        Ok(Engine {
+            manifest,
+            client,
+            weights,
+            pred_weights,
+            decode_exes,
+            extend_exes,
+            predictor_exes,
+            kv_block,
+        })
+    }
+
+    pub fn new_kv(&self) -> TrajKv {
+        TrajKv::empty(self.manifest.model.kv_floats_per_traj())
+    }
+
+    /// Smallest compiled decode bucket that fits `n` trajectories.
+    pub fn decode_bucket(&self, n: usize) -> Result<usize> {
+        self.decode_exes
+            .keys()
+            .copied()
+            .find(|&b| b >= n)
+            .with_context(|| format!("no decode bucket >= {n}"))
+    }
+
+    /// Smallest compiled extend bucket (batch, chunk) fitting the request.
+    pub fn extend_bucket(&self, batch: usize, chunk: usize) -> Result<(usize, usize)> {
+        self.extend_exes
+            .keys()
+            .copied()
+            .filter(|&(b, c)| b >= batch && c >= chunk)
+            .min_by_key(|&(b, c)| (c, b))
+            .with_context(|| format!("no extend bucket >= ({batch},{chunk})"))
+    }
+
+    pub fn max_extend_chunk(&self) -> usize {
+        self.extend_exes.keys().map(|&(_, c)| c).max().unwrap_or(0)
+    }
+
+    /// Assemble the batched KV literal `[L, B, Hkv, S, D]` from per-
+    /// trajectory caches (None slots stay zero).
+    fn gather_kv(&self, slots: &[Option<&TrajKv>], batch: usize, key: bool) -> Result<Literal> {
+        let m = &self.manifest.model;
+        let total = m.n_layers * batch * self.kv_block;
+        let mut flat = vec![0.0f32; total];
+        for (b, s) in slots.iter().enumerate() {
+            if let Some(kv) = s {
+                let src = if key { &kv.k } else { &kv.v };
+                for l in 0..m.n_layers {
+                    let dst_off = (l * batch + b) * self.kv_block;
+                    let src_off = l * self.kv_block;
+                    flat[dst_off..dst_off + self.kv_block].copy_from_slice(
+                        &src[src_off..src_off + self.kv_block],
+                    );
+                }
+            }
+        }
+        Ok(Literal::vec1(&flat).reshape(&[
+            m.n_layers as i64,
+            batch as i64,
+            m.n_kv_heads as i64,
+            m.max_seq as i64,
+            m.head_dim as i64,
+        ])?)
+    }
+
+    /// Scatter an updated `[L, B, Hkv, S, D]` literal back to slots.
+    fn scatter_kv(
+        &self,
+        lit: &Literal,
+        slots: &mut [Option<&mut TrajKv>],
+        batch: usize,
+        key: bool,
+    ) -> Result<()> {
+        let m = &self.manifest.model;
+        let flat = lit.to_vec::<f32>()?;
+        for (b, s) in slots.iter_mut().enumerate() {
+            if let Some(kv) = s {
+                let dst = if key { &mut kv.k } else { &mut kv.v };
+                for l in 0..m.n_layers {
+                    let src_off = (l * batch + b) * self.kv_block;
+                    let dst_off = l * self.kv_block;
+                    dst[dst_off..dst_off + self.kv_block].copy_from_slice(
+                        &flat[src_off..src_off + self.kv_block],
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One decode step for up to `bucket` trajectories. `entries[i] =
+    /// (token, kv)`; the kv is updated in place and `kv.len` advances.
+    pub fn decode_step(
+        &self,
+        entries: &mut [(i32, &mut TrajKv)],
+    ) -> Result<DecodeOut> {
+        let n = entries.len();
+        let bucket = self.decode_bucket(n)?;
+        let exe = &self.decode_exes[&bucket];
+        let m = &self.manifest.model;
+
+        let mut tokens = vec![0i32; bucket];
+        let mut pos = vec![0i32; bucket];
+        for (i, (tok, kv)) in entries.iter().enumerate() {
+            if kv.len >= m.max_seq {
+                bail!("kv ring full (len={} max_seq={})", kv.len, m.max_seq);
+            }
+            tokens[i] = *tok;
+            pos[i] = kv.len as i32;
+        }
+        let k_lit = {
+            let slots: Vec<Option<&TrajKv>> = (0..bucket)
+                .map(|i| entries.get(i).map(|(_, kv)| &**kv))
+                .collect();
+            self.gather_kv(&slots, bucket, true)?
+        };
+        let v_lit = {
+            let slots: Vec<Option<&TrajKv>> = (0..bucket)
+                .map(|i| entries.get(i).map(|(_, kv)| &**kv))
+                .collect();
+            self.gather_kv(&slots, bucket, false)?
+        };
+
+        let mut args: Vec<&Literal> = self.weights.iter().collect();
+        let tok_lit = Literal::vec1(&tokens);
+        let pos_lit = Literal::vec1(&pos);
+        args.push(&tok_lit);
+        args.push(&pos_lit);
+        args.push(&k_lit);
+        args.push(&v_lit);
+
+        let out = exe.execute::<&Literal>(&args)?;
+        let tuple = out[0][0].to_literal_sync()?.to_tuple()?;
+        let [logits_lit, k_out, v_out]: [Literal; 3] = tuple
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("decode must return 3 results"))?;
+
+        {
+            let mut slots: Vec<Option<&mut TrajKv>> = entries
+                .iter_mut()
+                .map(|(_, kv)| Some(&mut **kv))
+                .collect();
+            slots.resize_with(bucket, || None);
+            self.scatter_kv(&k_out, &mut slots, bucket, true)?;
+            let mut slots: Vec<Option<&mut TrajKv>> = entries
+                .iter_mut()
+                .map(|(_, kv)| Some(&mut **kv))
+                .collect();
+            slots.resize_with(bucket, || None);
+            self.scatter_kv(&v_out, &mut slots, bucket, false)?;
+        }
+        for (_, kv) in entries.iter_mut() {
+            kv.len += 1;
+        }
+
+        let logits = logits_lit.to_vec::<f32>()?;
+        Ok(DecodeOut {
+            logits: logits[..n * m.vocab].to_vec(),
+            vocab: m.vocab,
+        })
+    }
+
+    /// Ingest `tokens` into a single trajectory's KV at its current
+    /// length (prompt prefill or tool-output extension), chunk by chunk.
+    /// Returns the logits after the final token.
+    pub fn extend(&self, kv: &mut TrajKv, tokens: &[i32]) -> Result<Vec<f32>> {
+        let m = &self.manifest.model;
+        if tokens.is_empty() {
+            bail!("extend with no tokens");
+        }
+        if kv.len + tokens.len() > m.max_seq {
+            bail!(
+                "extend overflows ring: len={} + {} > {}",
+                kv.len,
+                tokens.len(),
+                m.max_seq
+            );
+        }
+        let mut last_logits = Vec::new();
+        let mut off = 0;
+        while off < tokens.len() {
+            let left = tokens.len() - off;
+            let (bucket_b, bucket_c) =
+                self.extend_bucket(1, left.min(self.max_extend_chunk()))?;
+            let take = left.min(bucket_c);
+            let exe = &self.extend_exes[&(bucket_b, bucket_c)];
+
+            let mut chunk = vec![0i32; bucket_b * bucket_c];
+            chunk[..take].copy_from_slice(&tokens[off..off + take]);
+            let mut start = vec![0i32; bucket_b];
+            start[0] = kv.len as i32;
+            let mut valid = vec![1i32; bucket_b];
+            valid[0] = take as i32;
+
+            let slots: Vec<Option<&TrajKv>> = (0..bucket_b)
+                .map(|i| (i == 0).then_some(&*kv))
+                .collect();
+            let k_lit = self.gather_kv(&slots, bucket_b, true)?;
+            let v_lit = self.gather_kv(&slots, bucket_b, false)?;
+
+            let mut args: Vec<&Literal> = self.weights.iter().collect();
+            let tok_lit = Literal::vec1(&chunk)
+                .reshape(&[bucket_b as i64, bucket_c as i64])?;
+            let start_lit = Literal::vec1(&start);
+            let valid_lit = Literal::vec1(&valid);
+            args.push(&tok_lit);
+            args.push(&start_lit);
+            args.push(&valid_lit);
+            args.push(&k_lit);
+            args.push(&v_lit);
+
+            let out = exe.execute::<&Literal>(&args)?;
+            let tuple = out[0][0].to_literal_sync()?.to_tuple()?;
+            let [logits_lit, k_out, v_out]: [Literal; 3] =
+                tuple.try_into().map_err(|_| {
+                    anyhow::anyhow!("extend must return 3 results")
+                })?;
+            let mut slots: Vec<Option<&mut TrajKv>> = vec![Some(kv)];
+            slots.resize_with(bucket_b, || None);
+            self.scatter_kv(&k_out, &mut slots, bucket_b, true)?;
+            let mut slots: Vec<Option<&mut TrajKv>> = vec![Some(kv)];
+            slots.resize_with(bucket_b, || None);
+            self.scatter_kv(&v_out, &mut slots, bucket_b, false)?;
+            kv.len += take;
+            off += take;
+            let logits = logits_lit.to_vec::<f32>()?;
+            last_logits = logits[..m.vocab].to_vec();
+        }
+        Ok(last_logits)
+    }
+
+    /// Predict log1p(remaining tokens) for feature rows `[n, F]`.
+    pub fn predict(&self, features: &[f32]) -> Result<Vec<f32>> {
+        let f = self.manifest.n_features;
+        assert_eq!(features.len() % f, 0);
+        let n = features.len() / f;
+        let bucket = self
+            .predictor_exes
+            .keys()
+            .copied()
+            .find(|&b| b >= n)
+            .with_context(|| format!("no predictor bucket >= {n}"))?;
+        let exe = &self.predictor_exes[&bucket];
+        let mut padded = vec![0.0f32; bucket * f];
+        padded[..features.len()].copy_from_slice(features);
+        let mut args: Vec<&Literal> = self.pred_weights.iter().collect();
+        let feat_lit =
+            Literal::vec1(&padded).reshape(&[bucket as i64, f as i64])?;
+        args.push(&feat_lit);
+        let out = exe.execute::<&Literal>(&args)?;
+        // Single-result computations come back as a plain array (PJRT
+        // only tuples multi-result outputs).
+        let lit = out[0][0].to_literal_sync()?;
+        let all = lit.to_vec::<f32>()?;
+        Ok(all[..n].to_vec())
+    }
+}

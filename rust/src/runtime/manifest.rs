@@ -1,0 +1,192 @@
+//! Typed view of `artifacts/manifest.json` (the aot.py ↔ Rust ABI).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_hidden: usize,
+    pub max_seq: usize,
+    pub weight_seed: u64,
+}
+
+impl ModelMeta {
+    /// Floats in one trajectory's K (or V) cache: [L, Hkv, S, D].
+    pub fn kv_floats_per_traj(&self) -> usize {
+        self.n_layers * self.n_kv_heads * self.max_seq * self.head_dim
+    }
+
+    /// Approximate parameter count (for roofline estimates).
+    pub fn n_params(&self) -> usize {
+        let kv_dim = self.n_kv_heads * self.head_dim;
+        let per_layer = 2 * self.d_model
+            + self.d_model * self.d_model * 2
+            + 2 * self.d_model * kv_dim
+            + 3 * self.d_model * self.ffn_hidden;
+        2 * self.vocab * self.d_model + self.n_layers * per_layer + self.d_model
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExeKind {
+    Decode,
+    Extend,
+    Predictor,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExeMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ExeKind,
+    pub batch: usize,
+    /// Extend chunk width (0 otherwise).
+    pub chunk: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub weights_file: PathBuf,
+    pub weight_order: Vec<String>,
+    pub pred_order: Vec<String>,
+    pub executables: Vec<ExeMeta>,
+    pub n_features: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = Json::parse(&text)?;
+        let m = v.get("model")?;
+        let model = ModelMeta {
+            vocab: m.get("vocab")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            n_kv_heads: m.get("n_kv_heads")?.as_usize()?,
+            head_dim: m.get("head_dim")?.as_usize()?,
+            ffn_hidden: m.get("ffn_hidden")?.as_usize()?,
+            max_seq: m.get("max_seq")?.as_usize()?,
+            weight_seed: m.get("weight_seed")?.as_i64()? as u64,
+        };
+        let w = v.get("weights")?;
+        let weight_order = w
+            .get("order")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_str().map(String::from))
+            .collect::<Result<_, _>>()?;
+        let pred_order = w
+            .get("pred_order")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_str().map(String::from))
+            .collect::<Result<_, _>>()?;
+        let mut executables = Vec::new();
+        for e in v.get("executables")?.as_arr()? {
+            let kind = match e.get("kind")?.as_str()? {
+                "decode" => ExeKind::Decode,
+                "extend" => ExeKind::Extend,
+                "predictor" => ExeKind::Predictor,
+                other => anyhow::bail!("unknown executable kind {other}"),
+            };
+            executables.push(ExeMeta {
+                name: e.get("name")?.as_str()?.to_string(),
+                file: dir.join(e.get("file")?.as_str()?),
+                kind,
+                batch: e.get("batch")?.as_usize()?,
+                chunk: e
+                    .opt("chunk")
+                    .map(|c| c.as_usize())
+                    .transpose()?
+                    .unwrap_or(0),
+            });
+        }
+        let n_features = v
+            .get("predictor")?
+            .get("n_features")?
+            .as_usize()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            weights_file: dir.join(w.get("file")?.as_str()?),
+            weight_order,
+            pred_order,
+            executables,
+            n_features,
+        })
+    }
+
+    pub fn decode_batches(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .executables
+            .iter()
+            .filter(|e| e.kind == ExeKind::Decode)
+            .map(|e| e.batch)
+            .collect();
+        b.sort();
+        b
+    }
+
+    pub fn extend_shapes(&self) -> Vec<(usize, usize)> {
+        let mut s: Vec<(usize, usize)> = self
+            .executables
+            .iter()
+            .filter(|e| e.kind == ExeKind::Extend)
+            .map(|e| (e.batch, e.chunk))
+            .collect();
+        s.sort();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.vocab, 2048);
+        assert_eq!(m.model.max_seq, 256);
+        assert!(!m.decode_batches().is_empty());
+        assert!(!m.extend_shapes().is_empty());
+        assert_eq!(m.weight_order.len(), 1 + m.model.n_layers * 9 + 2);
+        assert_eq!(m.pred_order.len(), 6);
+        assert!(m.weights_file.exists());
+        for e in &m.executables {
+            assert!(e.file.exists(), "{:?} missing", e.file);
+        }
+    }
+
+    #[test]
+    fn kv_floats() {
+        let m = ModelMeta {
+            vocab: 2048,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 8,
+            n_kv_heads: 2,
+            head_dim: 32,
+            ffn_hidden: 512,
+            max_seq: 256,
+            weight_seed: 42,
+        };
+        assert_eq!(m.kv_floats_per_traj(), 4 * 2 * 256 * 32);
+        assert!(m.n_params() > 3_000_000);
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads `artifacts/` (AOT-compiled by python/compile once)
+//! and serves model execution from the Rust request path. Python is never
+//! on this path.
+
+pub mod engine;
+pub mod manifest;
+pub mod profiler;
+
+pub use engine::{DecodeOut, Engine, TrajKv};
+pub use manifest::{ExeKind, Manifest, ModelMeta};

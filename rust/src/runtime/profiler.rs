@@ -1,0 +1,88 @@
+//! Runtime profiler (paper §5.2 "Interference Factor"): measures
+//! per-token decode time across batch sizes on the real PJRT path and
+//! fits the interference model the placement DP and the simulator
+//! consume.
+
+use super::engine::Engine;
+use crate::config::ModelCost;
+use crate::coordinator::placement::InterferenceModel;
+use std::time::Instant;
+
+/// One profiled point: decode at a given batch size.
+#[derive(Debug, Clone, Copy)]
+pub struct ProfilePoint {
+    pub batch: usize,
+    /// Wall seconds per decode step (whole batch).
+    pub step_time: f64,
+    /// Per-trajectory per-token time (step_time; each trajectory gains
+    /// one token per step).
+    pub per_token: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub points: Vec<ProfilePoint>,
+    /// Contention-free per-token time (batch = 1).
+    pub base_token_time: f64,
+}
+
+impl Profile {
+    /// Interference factors normalized to batch 1.
+    pub fn interference(&self) -> InterferenceModel {
+        let points = self
+            .points
+            .iter()
+            .map(|p| (p.batch, p.per_token / self.base_token_time))
+            .collect();
+        InterferenceModel::Profiled { points }
+    }
+
+    /// A ModelCost calibrated from real measurements (for sim-vs-real
+    /// cross-validation runs).
+    pub fn to_model_cost(&self) -> ModelCost {
+        let mut m = ModelCost::mini();
+        m.base_token_time = self.base_token_time;
+        m
+    }
+
+    pub fn rows(&self) -> Vec<(usize, f64, f64)> {
+        self.points
+            .iter()
+            .map(|p| (p.batch, p.per_token, p.per_token / self.base_token_time))
+            .collect()
+    }
+}
+
+/// Measure decode step time at every compiled batch bucket.
+pub fn profile_decode(engine: &Engine, steps: usize, warmup: usize) -> anyhow::Result<Profile> {
+    let mut points = Vec::new();
+    for &batch in &engine.manifest.decode_batches() {
+        // Fresh caches with a mid-ring fill level (positions matter for
+        // the attention kernel's masked length).
+        let mut kvs: Vec<_> = (0..batch).map(|_| engine.new_kv()).collect();
+        for kv in &mut kvs {
+            engine.extend(kv, &[1, 2, 3, 4, 5, 6, 7, 8])?;
+        }
+        let run = |kvs: &mut Vec<crate::runtime::engine::TrajKv>,
+                   n: usize|
+         -> anyhow::Result<f64> {
+            let t0 = Instant::now();
+            for s in 0..n {
+                let mut entries: Vec<(i32, &mut _)> = kvs
+                    .iter_mut()
+                    .map(|kv| ((s % 100) as i32 + 2, kv))
+                    .collect();
+                engine.decode_step(&mut entries)?;
+            }
+            Ok(t0.elapsed().as_secs_f64() / n as f64)
+        };
+        run(&mut kvs, warmup.max(1))?;
+        let step_time = run(&mut kvs, steps.max(1))?;
+        points.push(ProfilePoint { batch, step_time, per_token: step_time });
+    }
+    let base = points
+        .first()
+        .map(|p| p.per_token)
+        .unwrap_or(1e-3);
+    Ok(Profile { points, base_token_time: base })
+}

@@ -1,0 +1,497 @@
+//! Real-execution serving path: the end-to-end validation that all three
+//! layers compose (DESIGN.md §6).
+//!
+//! Drives N *logical* rollout workers over the real PJRT [`Engine`]
+//! (MiniQwen artifacts): prompts are prefilled with `extend`, every
+//! generated token comes from a real `decode_step` + nucleus sampling,
+//! tool calls run on the wall clock through the simulated serverless
+//! manager, and the full Heddle control plane (scheduler, placement,
+//! migration, router) makes every orchestration decision.
+//!
+//! Workers are multiplexed on one thread because the `xla` crate's PJRT
+//! handles are `!Send` (Rc-based); each worker still has its own queue,
+//! active set, and KV residency map, so the orchestration semantics are
+//! identical to a multi-process deployment. Model parallelism does not
+//! exist on a CPU client, so the real path always runs `Fixed(1)`
+//! resources — the heterogeneous-MP claims are validated by the
+//! simulator (DESIGN.md §1).
+
+use crate::config::{PolicyConfig, ResourceKind, SimConfig};
+use crate::coordinator::control::ControlPlane;
+use crate::coordinator::scheduler::{
+    schedule_worker, ActiveSet, ScheduleAction, SchedulerQueue, StepRequest,
+};
+use crate::metrics::{RolloutReport, TrajectoryMetrics};
+use crate::model::{sample_top_p, synth_token};
+use crate::runtime::{Engine, TrajKv};
+use crate::util::rng::Rng;
+use crate::workload::TrajectorySpec;
+use std::collections::HashMap;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub n_workers: usize,
+    /// Running batch per worker (<= largest compiled decode bucket).
+    pub max_batch: usize,
+    pub policy: PolicyConfig,
+    /// Wall-clock scale on spec tool latencies (1.0 = as specified).
+    pub tool_scale: f64,
+    /// Scale on spec token counts so trajectories fit the KV ring.
+    pub token_scale: f64,
+    pub temperature: f64,
+    pub top_p: f64,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            n_workers: 2,
+            max_batch: 4,
+            policy: PolicyConfig::heddle(),
+            tool_scale: 0.02,
+            token_scale: 0.02,
+            temperature: 1.0,
+            top_p: 0.9,
+            seed: 0,
+        }
+    }
+}
+
+/// Scale + truncate a spec so its total context fits the KV ring.
+pub fn fit_to_ring(
+    spec: &TrajectorySpec,
+    max_seq: usize,
+    scale: f64,
+) -> TrajectorySpec {
+    let mut s = spec.scaled(scale);
+    let margin = 4usize;
+    s.prompt_tokens = s.prompt_tokens.clamp(1, max_seq / 4);
+    let mut ctx = s.prompt_tokens;
+    let mut keep = 0;
+    for st in &mut s.steps {
+        let need = st.gen_tokens + st.tool_output_tokens;
+        if ctx + need + margin > max_seq {
+            // Truncate the step to whatever fits, then stop.
+            let left = max_seq.saturating_sub(ctx + margin);
+            if left >= 2 {
+                st.gen_tokens = st.gen_tokens.min(left - 1).max(1);
+                st.tool_output_tokens = 0;
+                st.tool_latency = 0.0;
+                st.tool_failed = false;
+                keep += 1;
+            }
+            break;
+        }
+        ctx += need;
+        keep += 1;
+    }
+    s.steps.truncate(keep.max(1));
+    if let Some(last) = s.steps.last_mut() {
+        last.tool_latency = 0.0;
+        last.tool_output_tokens = 0;
+        last.tool_failed = false;
+    }
+    s
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Queued,
+    Running,
+    ToolWait,
+    Done,
+}
+
+struct ServeTraj {
+    phase: Phase,
+    step: usize,
+    /// Tokens generated so far in the current segment.
+    seg_done: usize,
+    /// Full token log: prompt + generated + tool outputs, in order.
+    log: Vec<i32>,
+    /// Tokens of `log` that still need prefilling before decoding.
+    prefilled: usize,
+    tool_deadline: f64,
+    enqueued_at: f64,
+    predicted: f64,
+    metrics: TrajectoryMetrics,
+}
+
+struct ServeWorker {
+    queue: SchedulerQueue,
+    active: ActiveSet,
+    /// KV residency: trajectory -> host cache (persisting = keeping it).
+    kv: HashMap<usize, TrajKv>,
+}
+
+/// Outcome of a serving run.
+pub struct ServeOutcome {
+    pub report: RolloutReport,
+    pub wall_seconds: f64,
+    pub tokens_generated: usize,
+    pub migrated_bytes: usize,
+    /// Mean wall microseconds per KV migration (Table 1 analogue).
+    pub mean_migration_us: f64,
+}
+
+impl ServeOutcome {
+    pub fn throughput(&self) -> f64 {
+        self.tokens_generated as f64 / self.wall_seconds.max(1e-9)
+    }
+}
+
+/// Run one rollout batch on the real engine. Trajectory segment lengths
+/// and tool behaviour replay `specs` (pre-fit to the ring); tokens are
+/// sampled from the real model.
+pub fn serve_rollout(
+    engine: &Engine,
+    cfg: &ServeConfig,
+    history: &[TrajectorySpec],
+    specs: &[TrajectorySpec],
+) -> anyhow::Result<ServeOutcome> {
+    let max_seq = engine.manifest.model.max_seq;
+    let vocab = engine.manifest.model.vocab;
+    let specs: Vec<TrajectorySpec> = specs
+        .iter()
+        .map(|s| fit_to_ring(s, max_seq, cfg.token_scale))
+        .collect();
+
+    // Control plane over logical workers (always MP=1 on CPU).
+    let mut sim_cfg = SimConfig::default();
+    sim_cfg.cluster.n_gpus = cfg.n_workers;
+    sim_cfg.cluster.mp_degrees = vec![1];
+    sim_cfg.cluster.max_batch_per_worker = cfg.max_batch;
+    sim_cfg.model = crate::config::ModelCost::mini();
+    sim_cfg.policy = cfg.policy;
+    sim_cfg.policy.resource = ResourceKind::Fixed(1);
+    sim_cfg.seed = cfg.seed;
+    let mut control = ControlPlane::new(&sim_cfg, history, &specs);
+    let n_workers = control.n_workers();
+
+    let mut workers: Vec<ServeWorker> = (0..n_workers)
+        .map(|_| ServeWorker {
+            queue: SchedulerQueue::new(cfg.policy.scheduler),
+            active: ActiveSet::new(),
+            kv: HashMap::new(),
+        })
+        .collect();
+    let mut trajs: Vec<ServeTraj> = specs
+        .iter()
+        .map(|s| {
+            let log = (0..s.prompt_tokens)
+                .map(|p| synth_token(cfg.seed, s.id, p, vocab))
+                .collect();
+            ServeTraj {
+                phase: Phase::Queued,
+                step: 0,
+                seg_done: 0,
+                log,
+                prefilled: 0,
+                tool_deadline: 0.0,
+                enqueued_at: 0.0,
+                predicted: 0.0,
+                metrics: TrajectoryMetrics { id: s.id, ..Default::default() },
+            }
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let now = || t0.elapsed().as_secs_f64();
+    let mut rng = Rng::new(cfg.seed ^ 0xfeed);
+    let mut req_seq: u64 = 0;
+    let mut migrated_bytes = 0usize;
+    let mut migration_us: Vec<f64> = Vec::new();
+
+    // Initial submissions.
+    let mut pending_routes: Vec<usize> = (0..specs.len()).collect();
+    for &i in &pending_routes {
+        trajs[i].predicted = control.refresh_prediction(&specs[i], 0);
+    }
+    for i in std::mem::take(&mut pending_routes) {
+        let (w, _) = control.router.route_step(i);
+        control.router.on_enter(w);
+        trajs[i].enqueued_at = now();
+        req_seq += 1;
+        workers[w].queue.push(StepRequest {
+            traj_id: i,
+            predicted_len: trajs[i].predicted,
+            seq: req_seq,
+            first_seq: i as u64,
+        });
+    }
+
+    let mut done = 0usize;
+    let mut guard = 0u64;
+    while done < specs.len() {
+        guard += 1;
+        anyhow::ensure!(
+            guard < 50_000_000,
+            "serve loop guard tripped ({done}/{} done)",
+            specs.len()
+        );
+        let t_now = now();
+
+        // 1. Tool completions.
+        for i in 0..trajs.len() {
+            if trajs[i].phase == Phase::ToolWait
+                && t_now >= trajs[i].tool_deadline
+            {
+                // Append tool output tokens to the context log.
+                let st = &specs[i];
+                let prev = trajs[i].step - 1;
+                let n_out = st.steps[prev].tool_output_tokens;
+                let base = trajs[i].log.len();
+                for p in 0..n_out {
+                    let t =
+                        synth_token(cfg.seed ^ 0x700_1, i, base + p, vocab);
+                    trajs[i].log.push(t);
+                }
+                trajs[i].phase = Phase::Queued;
+                trajs[i].enqueued_at = t_now;
+                let (w, _) = control.router.route_step(i);
+                control.router.on_enter(w);
+                req_seq += 1;
+                workers[w].queue.push(StepRequest {
+                    traj_id: i,
+                    predicted_len: trajs[i].predicted,
+                    seq: req_seq,
+                    first_seq: i as u64,
+                });
+            }
+        }
+
+        // 2. Admissions / preemptions per worker.
+        for w in 0..n_workers {
+            loop {
+                let action = {
+                    let worker = &mut workers[w];
+                    schedule_worker(
+                        &mut worker.queue,
+                        &worker.active,
+                        cfg.max_batch,
+                        cfg.policy.preemption,
+                    )
+                };
+                match action {
+                    ScheduleAction::Idle => break,
+                    ScheduleAction::Admit(req) => {
+                        admit(
+                            engine, &mut workers, &mut trajs, &mut control,
+                            w, req, now(),
+                        )?;
+                    }
+                    ScheduleAction::PreemptAndAdmit { victim, req } => {
+                        // Persist KV (already in the worker map), requeue.
+                        workers[w].active.remove(victim);
+                        trajs[victim].phase = Phase::Queued;
+                        trajs[victim].enqueued_at = now();
+                        trajs[victim].metrics.preemptions += 1;
+                        req_seq += 1;
+                        let vreq = StepRequest {
+                            traj_id: victim,
+                            predicted_len: trajs[victim].predicted,
+                            seq: req_seq,
+                            first_seq: victim as u64,
+                        };
+                        workers[w].queue.push(vreq);
+                        admit(
+                            engine, &mut workers, &mut trajs, &mut control,
+                            w, req, now(),
+                        )?;
+                    }
+                }
+            }
+        }
+
+        // 3. One decode step per worker with active trajectories.
+        let mut any_active = false;
+        for w in 0..n_workers {
+            let ids: Vec<usize> = workers[w].active.ids().collect();
+            if ids.is_empty() {
+                continue;
+            }
+            any_active = true;
+            // Build decode entries: last token of each trajectory's log.
+            let worker = &mut workers[w];
+            let mut kvs: Vec<(usize, TrajKv)> = ids
+                .iter()
+                .map(|&id| (id, worker.kv.remove(&id).expect("kv resident")))
+                .collect();
+            {
+                let mut entries: Vec<(i32, &mut TrajKv)> = kvs
+                    .iter_mut()
+                    .map(|(id, kv)| {
+                        (*trajs[*id].log.last().unwrap(), kv)
+                    })
+                    .collect();
+                let t_dec = now();
+                let out = engine.decode_step(&mut entries)?;
+                let dt = now() - t_dec;
+                for (row, &id) in ids.iter().enumerate() {
+                    let tok = sample_top_p(
+                        out.row(row),
+                        cfg.temperature,
+                        cfg.top_p,
+                        &mut rng,
+                    ) as i32;
+                    let tr = &mut trajs[id];
+                    tr.log.push(tok);
+                    tr.prefilled += 1; // decoded token is cached
+                    tr.seg_done += 1;
+                    tr.metrics.tokens_generated += 1;
+                    tr.metrics.gpu_time += dt / ids.len() as f64;
+                }
+            }
+            for (id, kv) in kvs {
+                workers[w].kv.insert(id, kv);
+            }
+
+            // Segment completions.
+            for &id in &ids {
+                let seg_len = specs[id].steps[trajs[id].step].gen_tokens;
+                if trajs[id].seg_done < seg_len {
+                    continue;
+                }
+                workers[w].active.remove(id);
+                control.router.on_leave(w);
+                control.router.set_cache(id, w, trajs[id].prefilled);
+                trajs[id].seg_done = 0;
+                trajs[id].metrics.steps += 1;
+                let step = trajs[id].step;
+                let last = step + 1 >= specs[id].n_steps();
+                if last {
+                    trajs[id].phase = Phase::Done;
+                    trajs[id].metrics.finish_time = now();
+                    done += 1;
+                    continue;
+                }
+                trajs[id].step += 1;
+                trajs[id].phase = Phase::ToolWait;
+                let lat =
+                    specs[id].steps[step].tool_latency * cfg.tool_scale;
+                trajs[id].tool_deadline = now() + lat;
+                trajs[id].metrics.tool_time += lat;
+                // Progressive prediction + opportunistic migration during
+                // the tool interval.
+                let pred =
+                    control.refresh_prediction(&specs[id], step + 1);
+                trajs[id].predicted = pred;
+                if cfg.policy.migration {
+                    let active: Vec<(usize, f64, usize)> = trajs
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, t)| t.phase != Phase::Done)
+                        .map(|(tid, t)| {
+                            let host = workers
+                                .iter()
+                                .position(|wk| wk.kv.contains_key(&tid))
+                                .unwrap_or(0);
+                            (tid, t.predicted, host)
+                        })
+                        .collect();
+                    let kv_tokens = trajs[id].prefilled;
+                    if let Some(req) = control.check_migration(
+                        id, pred, kv_tokens, &active,
+                    ) {
+                        // Execute immediately (the tool interval is the
+                        // masking window): move the host KV between
+                        // worker maps and re-assign.
+                        let t_mig = Instant::now();
+                        if let Some(kv) =
+                            workers[req.src_worker].kv.remove(&id)
+                        {
+                            migrated_bytes += kv.bytes();
+                            workers[req.dst_worker].kv.insert(id, kv);
+                            control.router.reassign(id, req.dst_worker);
+                            control.router.set_cache(
+                                id,
+                                req.dst_worker,
+                                trajs[id].prefilled,
+                            );
+                            trajs[id].metrics.migrations += 1;
+                            migration_us.push(
+                                t_mig.elapsed().as_secs_f64() * 1e6,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        if !any_active {
+            // Everything is tool-waiting: sleep until the next deadline.
+            let next = trajs
+                .iter()
+                .filter(|t| t.phase == Phase::ToolWait)
+                .map(|t| t.tool_deadline)
+                .fold(f64::INFINITY, f64::min);
+            if next.is_finite() {
+                let dt = (next - now()).max(0.0);
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    dt.min(0.050) + 1e-4,
+                ));
+            }
+        }
+    }
+
+    let wall = now();
+    let tokens: usize = trajs.iter().map(|t| t.metrics.tokens_generated).sum();
+    let mean_mig = if migration_us.is_empty() {
+        0.0
+    } else {
+        migration_us.iter().sum::<f64>() / migration_us.len() as f64
+    };
+    Ok(ServeOutcome {
+        report: RolloutReport::from_trajectories(
+            trajs.into_iter().map(|t| t.metrics).collect(),
+        ),
+        wall_seconds: wall,
+        tokens_generated: tokens,
+        migrated_bytes,
+        mean_migration_us: mean_mig,
+    })
+}
+
+/// Admit a request on a worker: ensure the KV is resident and prefilled
+/// up to the log, then activate.
+fn admit(
+    engine: &Engine,
+    workers: &mut [ServeWorker],
+    trajs: &mut [ServeTraj],
+    control: &mut ControlPlane,
+    w: usize,
+    req: StepRequest,
+    t_now: f64,
+) -> anyhow::Result<()> {
+    let id = req.traj_id;
+    // KV residency: if it lives on another worker and wasn't migrated,
+    // recompute from scratch (cache miss — the Fig. 15 penalty).
+    let resident = workers[w].kv.contains_key(&id);
+    if !resident {
+        if let Some(src) = workers.iter().position(|wk| wk.kv.contains_key(&id)) {
+            // Cache-miss recompute path: drop the stale copy.
+            workers[src].kv.remove(&id);
+            trajs[id].metrics.recomputed_tokens += trajs[id].prefilled;
+        }
+        workers[w].kv.insert(id, engine.new_kv());
+        trajs[id].prefilled = 0;
+    }
+    // Prefill any un-ingested context (prompt, tool outputs, or a full
+    // recompute after a cache miss). The final context token stays
+    // un-prefilled: it is the decode input.
+    let target = trajs[id].log.len().saturating_sub(1);
+    if trajs[id].prefilled < target {
+        let kv = workers[w].kv.get_mut(&id).unwrap();
+        let slice: Vec<i32> =
+            trajs[id].log[trajs[id].prefilled..target].to_vec();
+        engine.extend(kv, &slice)?;
+        trajs[id].prefilled = target;
+    }
+    trajs[id].phase = Phase::Running;
+    trajs[id].metrics.queue_delay += t_now - trajs[id].enqueued_at;
+    workers[w].active.insert(id, req.predicted_len);
+    control.router.set_cache(id, w, trajs[id].prefilled);
+    Ok(())
+}

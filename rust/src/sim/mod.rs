@@ -1,0 +1,692 @@
+//! Discrete-event cluster simulator: the paper-scale substrate
+//! (DESIGN.md §1 — replaces the 64-GPU Hopper testbed).
+//!
+//! The simulator executes a rollout batch of [`TrajectorySpec`]s on a
+//! cluster of heterogeneous rollout workers under a [`ControlPlane`],
+//! with continuous batching, tool calls through the serverless
+//! [`ToolManager`], progressive prediction, preemption, and opportunistic
+//! KV migration. All of Formula 1's terms are modelled explicitly:
+//!
+//!  * T_queue — step requests wait in per-worker [`SchedulerQueue`]s;
+//!  * T (base per-token time) — per-worker, from the MP degree;
+//!  * α (interference) — per-token time scales with the worker's live
+//!    batch size through the interference model;
+//!  * T_tool — from the workload spec, via the FaaS tool manager.
+//!
+//! ## Timing model
+//!
+//! Workers run continuous batching: every active trajectory decodes at
+//! the same rate `1 / (T_worker · F(batch))` tokens/s; prefill work is
+//! converted to token-equivalents via the model's `prefill_factor`.
+//! Rates are piecewise-constant between composition changes, so the
+//! engine only recomputes a worker's earliest segment completion when
+//! its active set changes — a standard fluid/DES hybrid.
+
+use crate::config::SimConfig;
+use crate::coordinator::control::ControlPlane;
+use crate::coordinator::migration::MigrationRequest;
+use crate::coordinator::scheduler::{
+    schedule_worker, ActiveSet, ScheduleAction, SchedulerQueue, StepRequest,
+};
+use crate::metrics::{RolloutReport, TrajectoryMetrics};
+use crate::tools::{FaasConfig, ToolManager};
+use crate::workload::TrajectorySpec;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Trajectory lifecycle phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Step request waiting in a worker queue.
+    Queued,
+    /// Decoding (or prefilling) on a worker.
+    Running,
+    /// Parked in a tool call.
+    ToolWait,
+    /// Tool finished but a migration is still in flight (exposed
+    /// migration overhead — Table 1 discussion).
+    MigrationWait,
+    Done,
+}
+
+#[derive(Debug)]
+struct TrajState {
+    phase: Phase,
+    /// Index of the step currently being generated / waited on.
+    step: usize,
+    /// Remaining token-equivalents of the current segment (prefill
+    /// conversion included).
+    remaining: f64,
+    /// Worker currently hosting (queue or active) the trajectory.
+    worker: Option<usize>,
+    /// Worker holding the KV prefix (None = nothing cached anywhere).
+    kv_worker: Option<usize>,
+    /// Tokens represented by the resident KV prefix.
+    kv_tokens: usize,
+    /// Current progressive prediction of total length.
+    predicted: f64,
+    /// Pending migration in flight?
+    migrating: bool,
+    /// When the current queue wait started.
+    enqueued_at: f64,
+    metrics: TrajectoryMetrics,
+}
+
+#[derive(Debug)]
+struct WorkerState {
+    queue: SchedulerQueue,
+    active: ActiveSet,
+    /// (traj, shared-rate remaining handled in TrajState) — active ids
+    /// are in `active`; remaining work lives on the TrajState.
+    last_update: f64,
+    /// Event versioning: stale heap entries are dropped.
+    version: u64,
+    max_slots: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Event {
+    /// Earliest segment completion on a worker (validity via version).
+    Segment { worker: usize, version: u64 },
+    ToolDone { traj: usize },
+    MigrationDone { traj: usize, dst: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Timed {
+    time: f64,
+    seq: u64,
+    ev: Event,
+}
+
+impl PartialEq for Timed {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Timed {}
+impl PartialOrd for Timed {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Timed {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap by time (BinaryHeap is a max-heap → reverse).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The simulation engine for one rollout batch.
+pub struct Simulator<'a> {
+    cfg: &'a SimConfig,
+    specs: &'a [TrajectorySpec],
+    control: ControlPlane,
+    tools: ToolManager,
+    workers: Vec<WorkerState>,
+    trajs: Vec<TrajState>,
+    heap: BinaryHeap<Timed>,
+    now: f64,
+    seq: u64,
+    req_seq: u64,
+    /// In-flight migrations (needed to release endpoints on completion).
+    inflight: Vec<MigrationRequest>,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(
+        cfg: &'a SimConfig,
+        history: &[TrajectorySpec],
+        specs: &'a [TrajectorySpec],
+    ) -> Self {
+        let control = ControlPlane::new(cfg, history, specs);
+        let n_workers = control.n_workers();
+        // Running-batch capacity scales with the worker's MP degree (KV
+        // memory scales with the number of shards) — this is how the
+        // paper keeps "the same global batch size" for Heddle.
+        let workers = (0..n_workers)
+            .map(|w| WorkerState {
+                queue: SchedulerQueue::new(cfg.policy.scheduler),
+                active: ActiveSet::new(),
+                last_update: 0.0,
+                version: 0,
+                max_slots: cfg.cluster.max_batch_per_worker
+                    * control.allocation.degrees[w],
+            })
+            .collect();
+        let trajs = specs
+            .iter()
+            .map(|s| TrajState {
+                phase: Phase::Queued,
+                step: 0,
+                remaining: 0.0,
+                worker: None,
+                kv_worker: None,
+                kv_tokens: 0,
+                predicted: 0.0,
+                migrating: false,
+                enqueued_at: 0.0,
+                metrics: TrajectoryMetrics { id: s.id, ..Default::default() },
+            })
+            .collect();
+        Simulator {
+            cfg,
+            specs,
+            control,
+            tools: ToolManager::new(FaasConfig::default()),
+            workers,
+            trajs,
+            heap: BinaryHeap::new(),
+            now: 0.0,
+            seq: 0,
+            req_seq: 0,
+            inflight: Vec::new(),
+        }
+    }
+
+    /// Run the rollout to completion and return the report.
+    pub fn run(mut self) -> RolloutReport {
+        // Submit every trajectory's first step.
+        for i in 0..self.specs.len() {
+            self.trajs[i].predicted =
+                self.control.refresh_prediction(&self.specs[i], 0);
+            self.enqueue_step(i);
+        }
+        let ids: Vec<usize> = (0..self.workers.len()).collect();
+        for w in ids {
+            self.pump_worker(w);
+        }
+
+        let mut safety: u64 = 0;
+        let budget = 10_000_000u64.max(self.specs.len() as u64 * 10_000);
+        while let Some(t) = self.heap.pop() {
+            safety += 1;
+            assert!(safety < budget, "simulator event budget exceeded");
+            debug_assert!(t.time >= self.now - 1e-9, "time went backwards");
+            match t.ev {
+                Event::Segment { worker, version } => {
+                    if self.workers[worker].version != version {
+                        continue; // stale
+                    }
+                    self.now = t.time;
+                    self.on_segment_boundary(worker);
+                }
+                Event::ToolDone { traj } => {
+                    self.now = t.time;
+                    self.on_tool_done(traj);
+                }
+                Event::MigrationDone { traj, dst } => {
+                    self.now = t.time;
+                    self.on_migration_done(traj, dst);
+                }
+            }
+        }
+        debug_assert!(
+            self.trajs.iter().all(|t| t.phase == Phase::Done),
+            "simulation drained with unfinished trajectories"
+        );
+        RolloutReport::from_trajectories(
+            self.trajs.into_iter().map(|t| t.metrics).collect(),
+        )
+    }
+
+    // ---- helpers ---------------------------------------------------------
+
+    fn push_event(&mut self, time: f64, ev: Event) {
+        self.seq += 1;
+        self.heap.push(Timed { time, seq: self.seq, ev });
+    }
+
+    /// Per-trajectory decode rate on `worker` right now (token-equiv/s).
+    fn worker_rate(&self, worker: usize) -> f64 {
+        let batch = self.workers[worker].active.len().max(1);
+        1.0 / self.control.worker_token_time_at(worker, batch)
+    }
+
+    /// Settle elapsed work on a worker's active set up to `self.now`.
+    fn settle(&mut self, worker: usize) {
+        let dt = self.now - self.workers[worker].last_update;
+        if dt > 0.0 {
+            let rate = self.worker_rate(worker);
+            let done = dt * rate;
+            let ids: Vec<usize> =
+                self.workers[worker].active.ids().collect();
+            for id in ids {
+                let tr = &mut self.trajs[id];
+                tr.remaining = (tr.remaining - done).max(0.0);
+                tr.metrics.gpu_time += dt;
+                // Tokens generated this interval (prefill fractions count
+                // toward throughput only at segment granularity; see
+                // segment completion).
+            }
+        }
+        self.workers[worker].last_update = self.now;
+    }
+
+    /// Recompute the worker's earliest segment completion event.
+    fn rearm(&mut self, worker: usize) {
+        self.workers[worker].version += 1;
+        let version = self.workers[worker].version;
+        if self.workers[worker].active.is_empty() {
+            return;
+        }
+        let rate = self.worker_rate(worker);
+        let mut min_t = f64::INFINITY;
+        for id in self.workers[worker].active.ids() {
+            let t = self.trajs[id].remaining / rate;
+            if t < min_t {
+                min_t = t;
+            }
+        }
+        self.push_event(self.now + min_t, Event::Segment { worker, version });
+    }
+
+    /// Total context tokens accumulated before the current step's
+    /// generation (prompt + prior generations + prior tool outputs).
+    fn context_tokens(&self, traj: usize) -> usize {
+        let spec = &self.specs[traj];
+        let st = &self.trajs[traj];
+        let mut ctx = spec.prompt_tokens;
+        for s in spec.steps.iter().take(st.step) {
+            ctx += s.gen_tokens + s.tool_output_tokens;
+        }
+        ctx
+    }
+
+    /// Enqueue the current step of `traj` on a worker chosen by the
+    /// router, converting any required prefill into token-equivalents.
+    fn enqueue_step(&mut self, traj: usize) {
+        let (worker, _cache_hit) = self.control.router.route_step(traj);
+        let spec = &self.specs[traj];
+        let st = &mut self.trajs[traj];
+        st.worker = Some(worker);
+        st.phase = Phase::Queued;
+        st.enqueued_at = self.now;
+
+        // Work for this segment: generation tokens + prefill of whatever
+        // context is not already cached on this worker.
+        let gen = spec.steps[st.step].gen_tokens as f64;
+        let ctx = {
+            let mut ctx = spec.prompt_tokens;
+            for s in spec.steps.iter().take(st.step) {
+                ctx += s.gen_tokens + s.tool_output_tokens;
+            }
+            ctx
+        };
+        let cached = if st.kv_worker == Some(worker) { st.kv_tokens } else { 0 };
+        let to_prefill = ctx.saturating_sub(cached);
+        if cached < ctx && st.step > 0 && st.kv_worker != Some(worker) {
+            st.metrics.recomputed_tokens += to_prefill;
+        }
+        st.remaining =
+            gen + to_prefill as f64 * self.cfg.model.prefill_factor;
+
+        self.req_seq += 1;
+        let req = StepRequest {
+            traj_id: traj,
+            predicted_len: st.predicted,
+            seq: self.req_seq,
+            first_seq: spec.id as u64,
+        };
+        self.control.router.on_enter(worker);
+        self.workers[worker].queue.push(req);
+        self.pump_worker(worker);
+    }
+
+    /// Admit / preempt until the worker reaches a fixed point.
+    fn pump_worker(&mut self, worker: usize) {
+        loop {
+            let w = &mut self.workers[worker];
+            let action = schedule_worker(
+                &mut w.queue,
+                &w.active,
+                w.max_slots,
+                self.cfg.policy.preemption,
+            );
+            match action {
+                ScheduleAction::Idle => break,
+                ScheduleAction::Admit(req) => {
+                    self.settle(worker);
+                    self.admit(worker, req);
+                    self.rearm(worker);
+                }
+                ScheduleAction::PreemptAndAdmit { victim, req } => {
+                    self.settle(worker);
+                    self.preempt(worker, victim);
+                    self.admit(worker, req);
+                    self.rearm(worker);
+                }
+            }
+        }
+    }
+
+    fn admit(&mut self, worker: usize, req: StepRequest) {
+        let traj = req.traj_id;
+        let st = &mut self.trajs[traj];
+        debug_assert_eq!(st.phase, Phase::Queued);
+        st.phase = Phase::Running;
+        st.metrics.queue_delay += self.now - st.enqueued_at;
+        self.workers[worker].active.insert(traj, st.predicted);
+    }
+
+    /// Preempt an active trajectory (Algorithm 1 lines 7-9): persist its
+    /// KV (it already lives on this worker) and re-queue it.
+    fn preempt(&mut self, worker: usize, victim: usize) {
+        self.workers[worker].active.remove(victim);
+        let st = &mut self.trajs[victim];
+        st.phase = Phase::Queued;
+        st.enqueued_at = self.now;
+        st.metrics.preemptions += 1;
+        // KV of the partial segment persists on the worker.
+        st.kv_worker = Some(worker);
+        self.req_seq += 1;
+        let req = StepRequest {
+            traj_id: victim,
+            predicted_len: st.predicted,
+            seq: self.req_seq,
+            first_seq: self.specs[victim].id as u64,
+        };
+        self.workers[worker].queue.push(req);
+    }
+
+    /// A worker hit a segment boundary: finish every active trajectory
+    /// whose remaining work reached zero.
+    fn on_segment_boundary(&mut self, worker: usize) {
+        self.settle(worker);
+        let finished: Vec<usize> = self.workers[worker]
+            .active
+            .ids()
+            .filter(|&id| self.trajs[id].remaining <= 1e-9)
+            .collect();
+        for traj in finished {
+            self.workers[worker].active.remove(traj);
+            self.control.router.on_leave(worker);
+            self.finish_segment(worker, traj);
+        }
+        self.pump_worker(worker);
+        self.rearm(worker);
+    }
+
+    fn finish_segment(&mut self, worker: usize, traj: usize) {
+        let spec = &self.specs[traj];
+        let step = self.trajs[traj].step;
+        let gen = spec.steps[step].gen_tokens;
+        {
+            let st = &mut self.trajs[traj];
+            st.metrics.tokens_generated += gen;
+            st.metrics.steps += 1;
+            // The full context (incl. this step's generation) is now
+            // cached on this worker.
+            st.kv_worker = Some(worker);
+        }
+        let ctx_after = self.context_tokens(traj)
+            + gen
+            + spec.steps[step].tool_output_tokens;
+        self.trajs[traj].kv_tokens = ctx_after;
+
+        let last_step = step + 1 >= spec.n_steps();
+        if last_step {
+            let st = &mut self.trajs[traj];
+            st.phase = Phase::Done;
+            st.metrics.finish_time = self.now;
+            return;
+        }
+
+        // Progressive prediction refresh at the step boundary (§4.1 —
+        // runs alongside the tool call, off the critical path).
+        let pred = self.control.refresh_prediction(spec, step + 1);
+        self.trajs[traj].predicted = pred;
+        self.trajs[traj].step = step + 1;
+        self.trajs[traj].phase = Phase::ToolWait;
+        self.trajs[traj].worker = None;
+
+        // Reorder priorities of this worker's queue members? PPS queues
+        // are ordered by the priority captured at push time; the next
+        // push uses the refreshed value (the paper re-sorts per event).
+
+        // Tool call through the serverless manager.
+        let lat = spec.steps[step].tool_latency.max(1e-4);
+        let inv = self.tools.invoke(spec.domain, self.now, lat);
+        self.trajs[traj].metrics.tool_time += inv.finish - self.now;
+        self.push_event(inv.finish, Event::ToolDone { traj });
+
+        // Opportunistic migration check (§5.3): only while tool-parked.
+        if self.cfg.policy.migration {
+            let active: Vec<(usize, f64, usize)> = self
+                .trajs
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.phase != Phase::Done)
+                .map(|(id, t)| {
+                    (id, t.predicted, t.kv_worker.unwrap_or(0))
+                })
+                .collect();
+            let kv_tokens = self.trajs[traj].kv_tokens;
+            let mig = self.control.check_migration(
+                traj, pred, kv_tokens, &active,
+            );
+            if std::env::var("HEDDLE_DEBUG_MIG").is_ok() {
+                eprintln!("mig check traj={traj} pred={pred:.0} -> {mig:?}");
+            }
+            if let Some(req) = mig {
+                self.control.transmissions.submit(req);
+            }
+            self.pump_migrations();
+        }
+    }
+
+    /// Launch any admissible KV transfers.
+    fn pump_migrations(&mut self) {
+        let batch = self.control.transmissions.next_batch();
+        for req in batch {
+            let t = req.transfer_time(
+                self.cfg.cluster.migration_bandwidth,
+                self.cfg.cluster.migration_latency,
+            );
+            self.trajs[req.traj_id].metrics.migration_seconds += t;
+            self.trajs[req.traj_id].migrating = true;
+            self.push_event(
+                self.now + t,
+                Event::MigrationDone { traj: req.traj_id, dst: req.dst_worker },
+            );
+            self.inflight.push(req);
+        }
+    }
+
+    fn on_migration_done(&mut self, traj: usize, dst: usize) {
+        if let Some(i) =
+            self.inflight.iter().position(|r| r.traj_id == traj)
+        {
+            let req = self.inflight.swap_remove(i);
+            self.control.transmissions.complete(&req);
+        }
+        {
+            let st = &mut self.trajs[traj];
+            st.migrating = false;
+            st.kv_worker = Some(dst);
+            st.metrics.migrations += 1;
+        }
+        self.control.router.reassign(traj, dst);
+        self.control.router.set_cache(traj, dst, self.trajs[traj].kv_tokens);
+        // Tool already came back and was blocked on us? Resume it.
+        if self.trajs[traj].phase == Phase::MigrationWait {
+            self.enqueue_step(traj);
+        }
+        self.pump_migrations();
+    }
+
+    fn on_tool_done(&mut self, traj: usize) {
+        // Sync the router's cache view.
+        if let Some(w) = self.trajs[traj].kv_worker {
+            let kv = self.trajs[traj].kv_tokens;
+            self.control.router.set_cache(traj, w, kv);
+        }
+        if self.trajs[traj].migrating {
+            // Exposed migration overhead: the step must wait for the KV
+            // to land (rare — Table 1 shows migration ≪ tool time).
+            self.trajs[traj].phase = Phase::MigrationWait;
+            return;
+        }
+        self.enqueue_step(traj);
+    }
+}
+
+/// Convenience: simulate one rollout batch end-to-end.
+pub fn simulate(
+    cfg: &SimConfig,
+    history: &[TrajectorySpec],
+    specs: &[TrajectorySpec],
+) -> RolloutReport {
+    Simulator::new(cfg, history, specs).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PolicyConfig, SimConfig};
+    use crate::predictor::history_workload;
+    use crate::workload::{generate, Domain, WorkloadConfig};
+
+    fn run(policy: PolicyConfig, n_prompts: usize, seed: u64) -> RolloutReport {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.n_gpus = 8;
+        cfg.cluster.max_batch_per_worker = 16;
+        cfg.policy = policy;
+        cfg.seed = seed;
+        let history = history_workload(Domain::Coding, seed);
+        let specs =
+            generate(&WorkloadConfig::new(Domain::Coding, n_prompts, seed));
+        simulate(&cfg, &history, &specs)
+    }
+
+    #[test]
+    fn all_trajectories_complete() {
+        let r = run(PolicyConfig::heddle(), 4, 1);
+        assert_eq!(r.trajectories.len(), 64);
+        for t in &r.trajectories {
+            assert!(t.finish_time > 0.0, "traj {} unfinished", t.id);
+            assert!(t.tokens_generated > 0);
+            assert!(t.steps > 0);
+        }
+    }
+
+    #[test]
+    fn tokens_match_specs_exactly() {
+        let specs =
+            generate(&WorkloadConfig::new(Domain::Math, 3, 2));
+        let mut cfg = SimConfig::default();
+        cfg.cluster.n_gpus = 4;
+        cfg.policy = PolicyConfig::heddle();
+        let history = history_workload(Domain::Math, 2);
+        let r = simulate(&cfg, &history, &specs);
+        for (t, s) in r.trajectories.iter().zip(&specs) {
+            assert_eq!(t.tokens_generated, s.total_tokens());
+            assert_eq!(t.steps, s.n_steps());
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run(PolicyConfig::heddle(), 3, 5);
+        let b = run(PolicyConfig::heddle(), 3, 5);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.total_migrations, b.total_migrations);
+    }
+
+    #[test]
+    fn baselines_run_all_policies() {
+        for policy in [
+            PolicyConfig::verl(1),
+            PolicyConfig::verl_star(1),
+            PolicyConfig::slime(1),
+        ] {
+            let r = run(policy, 2, 3);
+            assert_eq!(r.trajectories.len(), 32);
+            assert!(r.makespan > 0.0);
+            assert_eq!(r.total_migrations, 0, "baselines must not migrate");
+            assert_eq!(r.total_preemptions, 0);
+        }
+    }
+
+    #[test]
+    fn heddle_beats_round_robin_baselines() {
+        // The headline claim (Fig. 12), small scale: Heddle's makespan
+        // must beat the step-centric baselines on the same workload.
+        let h = run(PolicyConfig::heddle(), 6, 7);
+        let v = run(PolicyConfig::verl(1), 6, 7);
+        let s = run(PolicyConfig::slime(1), 6, 7);
+        assert!(
+            h.makespan < v.makespan,
+            "heddle {} !< verl {}",
+            h.makespan,
+            v.makespan
+        );
+        assert!(
+            h.makespan < s.makespan,
+            "heddle {} !< slime {}",
+            h.makespan,
+            s.makespan
+        );
+    }
+
+    #[test]
+    fn queue_delay_nonnegative_and_bounded() {
+        let r = run(PolicyConfig::slime(1), 4, 9);
+        for t in &r.trajectories {
+            assert!(t.queue_delay >= 0.0);
+            assert!(
+                t.queue_delay <= t.completion_time() + 1e-6,
+                "queue {} > completion {}",
+                t.queue_delay,
+                t.completion_time()
+            );
+        }
+    }
+
+    #[test]
+    fn makespan_bounds_every_completion() {
+        let r = run(PolicyConfig::heddle(), 4, 11);
+        for t in &r.trajectories {
+            assert!(t.finish_time <= r.makespan + 1e-9);
+        }
+    }
+
+    #[test]
+    fn migration_occurs_under_heddle() {
+        let r = run(PolicyConfig::heddle(), 8, 13);
+        assert!(
+            r.total_migrations > 0,
+            "expected opportunistic migrations on a skewed workload"
+        );
+    }
+
+    #[test]
+    fn cache_aware_recomputes_less_than_least_load() {
+        // Verl's pinning maximizes cache hits; Slime's least-load routing
+        // must recompute more prefix tokens (the Fig. 15 trade-off).
+        let verl = run(PolicyConfig::verl(1), 6, 17);
+        let slime = run(PolicyConfig::slime(1), 6, 17);
+        assert!(
+            verl.total_recomputed_tokens <= slime.total_recomputed_tokens,
+            "verl {} > slime {}",
+            verl.total_recomputed_tokens,
+            slime.total_recomputed_tokens
+        );
+    }
+
+    #[test]
+    fn single_worker_single_gpu() {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.n_gpus = 1;
+        cfg.policy = PolicyConfig::verl(1);
+        let history = history_workload(Domain::Math, 1);
+        let specs = generate(&WorkloadConfig::new(Domain::Math, 1, 1));
+        let r = simulate(&cfg, &history, &specs);
+        assert_eq!(r.trajectories.len(), 16);
+        assert!(r.makespan > 0.0);
+    }
+}

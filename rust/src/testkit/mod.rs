@@ -1,0 +1,103 @@
+//! Mini property-testing harness (offline substitute for `proptest`).
+//!
+//! Each property runs `cases` times with independent deterministic seeds;
+//! a failure reports the exact seed so the case can be replayed by name.
+//! A light "shrinking" pass retries the failing seed with progressively
+//! smaller size hints, reporting the smallest size that still fails.
+
+use crate::util::rng::Rng;
+
+/// Size hint passed to generators: properties should scale their inputs
+/// (vector lengths, value magnitudes) by `size` so shrinking works.
+#[derive(Debug, Clone, Copy)]
+pub struct Gen {
+    pub rng: u64,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn rng(&self) -> Rng {
+        Rng::new(self.rng)
+    }
+}
+
+/// Run a property over `cases` random cases. The property returns
+/// `Err(msg)` to signal failure. Panics (test failure) with the seed and
+/// minimal failing size.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(Gen) -> Result<(), String>,
+{
+    // Seed derives from the property name so adding properties does not
+    // reshuffle the cases of the others.
+    let base = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+    for case in 0..cases {
+        let seed =
+            base.wrapping_add((case as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let size = 2 + (case * 97) % 64; // sweep sizes 2..65
+        let g = Gen { rng: seed, size };
+        if let Err(msg) = prop(g) {
+            // Shrink: find the smallest size that still fails this seed.
+            let mut min_size = size;
+            let mut min_msg = msg;
+            for s in 1..size {
+                if let Err(m) = prop(Gen { rng: seed, size: s }) {
+                    min_size = s;
+                    min_msg = m;
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 min size {min_size}): {min_msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("reverse_involutive", 50, |g| {
+            let mut rng = g.rng();
+            let n = g.size;
+            let xs: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            prop_assert!(xs == ys, "reverse twice changed the vector");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always_fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_sweep() {
+        let mut seen = std::collections::HashSet::new();
+        check("size_sweep", 30, |g| {
+            seen.insert(g.size);
+            Ok(())
+        });
+        assert!(seen.len() > 10, "expected a spread of sizes: {seen:?}");
+    }
+}

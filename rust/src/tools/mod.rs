@@ -1,0 +1,269 @@
+//! Serverless tool manager (paper §3 "Tool Manager").
+//!
+//! The paper offloads tool execution (sandbox, web search, calculator) to
+//! an elastic FaaS backend; we simulate that substrate (DESIGN.md §1):
+//! warm-container pools per tool kind, cold-start penalties on scale-up,
+//! keep-alive expiry, elastic concurrency, and pay-as-you-go cost
+//! accounting. The *latency* of each call itself comes from the workload
+//! spec (so policy comparisons replay identical tool behaviour); the
+//! manager adds the infrastructure effects on top.
+
+use crate::workload::Domain;
+use std::collections::VecDeque;
+
+/// FaaS platform parameters (defaults follow public serverless
+/// measurements: ~150-400 ms cold starts, 10-minute keep-alive).
+#[derive(Debug, Clone)]
+pub struct FaasConfig {
+    pub cold_start: f64,
+    /// Seconds an idle warm container is retained.
+    pub keep_alive: f64,
+    /// Hard concurrency ceiling (accounts/region quota).
+    pub max_concurrency: usize,
+    /// $ per container-second (cost accounting only).
+    pub price_per_second: f64,
+    /// Containers pre-warmed at epoch start (ORION-style prewarming).
+    pub prewarm: usize,
+}
+
+impl Default for FaasConfig {
+    fn default() -> Self {
+        FaasConfig {
+            cold_start: 0.25,
+            keep_alive: 600.0,
+            max_concurrency: 4096,
+            price_per_second: 0.000_02,
+            prewarm: 64,
+        }
+    }
+}
+
+/// Outcome of admitting one tool invocation at time `now`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Invocation {
+    /// When the tool actually starts executing (>= now; queueing +
+    /// cold start included).
+    pub start: f64,
+    /// When the result is available.
+    pub finish: f64,
+    /// Whether this invocation paid a cold start.
+    pub cold: bool,
+}
+
+/// One tool kind's elastic container pool.
+#[derive(Debug)]
+struct Pool {
+    /// Warm containers: time each becomes idle-available (min-sorted lazily).
+    warm_until: Vec<f64>,
+    /// Busy containers: finish times.
+    busy: VecDeque<f64>,
+    cold_starts: u64,
+    invocations: u64,
+    busy_seconds: f64,
+}
+
+impl Pool {
+    fn new(prewarm: usize) -> Pool {
+        Pool {
+            warm_until: vec![0.0; prewarm],
+            busy: VecDeque::new(),
+            cold_starts: 0,
+            invocations: 0,
+            busy_seconds: 0.0,
+        }
+    }
+}
+
+/// The tool manager. Single-threaded, driven by the simulator clock (the
+/// real-serving path wraps it in a mutex and feeds wall-clock time).
+pub struct ToolManager {
+    cfg: FaasConfig,
+    pools: [Pool; 3],
+}
+
+fn pool_idx(d: Domain) -> usize {
+    match d {
+        Domain::Coding => 0,
+        Domain::Search => 1,
+        Domain::Math => 2,
+    }
+}
+
+impl ToolManager {
+    pub fn new(cfg: FaasConfig) -> Self {
+        let p = cfg.prewarm;
+        ToolManager {
+            cfg,
+            pools: [Pool::new(p), Pool::new(p), Pool::new(p)],
+        }
+    }
+
+    /// Admit a tool call of duration `exec_secs` for `domain` at `now`.
+    pub fn invoke(&mut self, domain: Domain, now: f64, exec_secs: f64) -> Invocation {
+        let cfg_cold = self.cfg.cold_start;
+        let keep = self.cfg.keep_alive;
+        let maxc = self.cfg.max_concurrency;
+        let pool = &mut self.pools[pool_idx(domain)];
+        pool.invocations += 1;
+
+        // Retire expired warm containers and finished busy ones.
+        pool.warm_until.retain(|&t| now - t <= keep);
+        while let Some(&f) = pool.busy.front() {
+            if f <= now {
+                pool.busy.pop_front();
+                pool.warm_until.push(f);
+            } else {
+                break;
+            }
+        }
+        pool.warm_until.retain(|&t| now - t <= keep);
+
+        let (start, cold) = if let Some(i) = pool
+            .warm_until
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+        {
+            // Warm container available immediately.
+            pool.warm_until.swap_remove(i);
+            (now, false)
+        } else if pool.busy.len() < maxc {
+            // Elastic scale-up: cold start.
+            pool.cold_starts += 1;
+            (now + cfg_cold, true)
+        } else {
+            // Quota saturated: wait for the earliest busy container.
+            let f = pool.busy.pop_front().unwrap();
+            pool.warm_until.push(f);
+            pool.warm_until.pop();
+            (f.max(now), false)
+        };
+
+        let finish = start + exec_secs;
+        // Keep busy list sorted by finish (VecDeque insert).
+        let idx = pool.busy.partition_point(|&f| f <= finish);
+        pool.busy.insert(idx, finish);
+        pool.busy_seconds += finish - start;
+        Invocation { start, finish, cold }
+    }
+
+    /// Fraction of invocations that paid a cold start.
+    pub fn cold_start_rate(&self, domain: Domain) -> f64 {
+        let p = &self.pools[pool_idx(domain)];
+        if p.invocations == 0 {
+            return 0.0;
+        }
+        p.cold_starts as f64 / p.invocations as f64
+    }
+
+    pub fn invocations(&self, domain: Domain) -> u64 {
+        self.pools[pool_idx(domain)].invocations
+    }
+
+    /// Pay-as-you-go cost so far ($).
+    pub fn total_cost(&self) -> f64 {
+        self.pools
+            .iter()
+            .map(|p| p.busy_seconds * self.cfg.price_per_second)
+            .sum()
+    }
+}
+
+impl Default for ToolManager {
+    fn default() -> Self {
+        Self::new(FaasConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warm_pool_avoids_cold_start() {
+        let mut tm = ToolManager::new(FaasConfig {
+            prewarm: 4,
+            ..Default::default()
+        });
+        let inv = tm.invoke(Domain::Coding, 0.0, 1.0);
+        assert!(!inv.cold);
+        assert_eq!(inv.start, 0.0);
+        assert_eq!(inv.finish, 1.0);
+    }
+
+    #[test]
+    fn burst_beyond_prewarm_pays_cold_start() {
+        let mut tm = ToolManager::new(FaasConfig {
+            prewarm: 2,
+            cold_start: 0.5,
+            ..Default::default()
+        });
+        let a = tm.invoke(Domain::Math, 0.0, 10.0);
+        let b = tm.invoke(Domain::Math, 0.0, 10.0);
+        let c = tm.invoke(Domain::Math, 0.0, 10.0);
+        assert!(!a.cold && !b.cold);
+        assert!(c.cold);
+        assert_eq!(c.start, 0.5);
+        assert!(tm.cold_start_rate(Domain::Math) > 0.3);
+    }
+
+    #[test]
+    fn containers_recycle_after_finish() {
+        let mut tm = ToolManager::new(FaasConfig {
+            prewarm: 1,
+            ..Default::default()
+        });
+        let a = tm.invoke(Domain::Search, 0.0, 1.0);
+        assert!(!a.cold);
+        // After the first finishes, the container is warm again.
+        let b = tm.invoke(Domain::Search, 2.0, 1.0);
+        assert!(!b.cold, "should reuse the now-idle container");
+    }
+
+    #[test]
+    fn keep_alive_expiry_forces_cold_start() {
+        let mut tm = ToolManager::new(FaasConfig {
+            prewarm: 1,
+            keep_alive: 10.0,
+            ..Default::default()
+        });
+        tm.invoke(Domain::Search, 0.0, 1.0);
+        // 100s later the pool is dead.
+        let b = tm.invoke(Domain::Search, 100.0, 1.0);
+        assert!(b.cold);
+    }
+
+    #[test]
+    fn concurrency_ceiling_queues() {
+        let mut tm = ToolManager::new(FaasConfig {
+            prewarm: 0,
+            max_concurrency: 1,
+            cold_start: 0.0,
+            ..Default::default()
+        });
+        let a = tm.invoke(Domain::Coding, 0.0, 5.0);
+        let b = tm.invoke(Domain::Coding, 0.0, 5.0);
+        assert_eq!(a.finish, 5.0);
+        assert!(b.start >= 5.0, "second call must wait: {b:?}");
+    }
+
+    #[test]
+    fn pools_are_independent() {
+        let mut tm = ToolManager::new(FaasConfig {
+            prewarm: 1,
+            ..Default::default()
+        });
+        tm.invoke(Domain::Coding, 0.0, 100.0);
+        let b = tm.invoke(Domain::Math, 0.0, 1.0);
+        assert!(!b.cold, "math pool unaffected by busy coding pool");
+    }
+
+    #[test]
+    fn cost_accumulates() {
+        let mut tm = ToolManager::default();
+        assert_eq!(tm.total_cost(), 0.0);
+        tm.invoke(Domain::Coding, 0.0, 100.0);
+        assert!(tm.total_cost() > 0.0);
+    }
+}

@@ -1,0 +1,63 @@
+//! Minimal benchmarking harness (offline substitute for `criterion`):
+//! warms up, runs N timed iterations, reports min/mean/p50.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:42} iters={:4} mean={:>12} min={:>12} p50={:>12}",
+            self.name,
+            self.iters,
+            super::fmt_secs(self.mean_s),
+            super::fmt_secs(self.min_s),
+            super::fmt_secs(self.p50_s),
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs. The closure's
+/// return value is black-boxed so work is not optimized away.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        min_s: times[0],
+        p50_s: times[times.len() / 2],
+    };
+    r.print();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bench_reports_sane_times() {
+        let r = super::bench("noop-ish", 1, 10, || {
+            (0..1000).sum::<u64>()
+        });
+        assert!(r.mean_s >= 0.0 && r.mean_s < 1.0);
+        assert!(r.min_s <= r.mean_s * 1.01);
+        assert_eq!(r.iters, 10);
+    }
+}

@@ -1,0 +1,31 @@
+//! Small in-tree substitutes for crates unavailable in the offline build
+//! environment (see the note in Cargo.toml).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Format a duration in seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fmt() {
+        assert_eq!(super::fmt_secs(0.5), "500.00ms");
+        assert_eq!(super::fmt_secs(2.0), "2.00s");
+        assert_eq!(super::fmt_secs(300.0), "5.0min");
+    }
+}

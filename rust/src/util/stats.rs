@@ -1,0 +1,266 @@
+//! Statistics helpers used by telemetry, the figure harnesses, and the
+//! predictor evaluation (recall / Pearson, paper Fig. 13).
+
+/// Percentile of a sample (linear interpolation); `q` in [0, 1].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Percentile of an already-sorted sample.
+pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+/// Pearson correlation coefficient (paper Fig. 13's second metric).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx).powi(2);
+        vy += (y - my).powi(2);
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx.sqrt() * vy.sqrt())
+}
+
+/// Recall of long-tail identification (paper Fig. 13's first metric):
+/// fraction of the true top-`frac` longest items that also appear in the
+/// predicted top-`frac`.
+pub fn longtail_recall(predicted: &[f64], actual: &[f64], frac: f64) -> f64 {
+    assert_eq!(predicted.len(), actual.len());
+    let n = predicted.len();
+    if n == 0 {
+        return f64::NAN;
+    }
+    let k = ((n as f64 * frac).ceil() as usize).clamp(1, n);
+    let top_k = |xs: &[f64]| -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+        idx.truncate(k);
+        idx
+    };
+    let true_top: std::collections::HashSet<usize> =
+        top_k(actual).into_iter().collect();
+    let hits = top_k(predicted)
+        .into_iter()
+        .filter(|i| true_top.contains(i))
+        .count();
+    hits as f64 / k as f64
+}
+
+/// CDF sample points of a dataset: returns (value, cumulative_fraction)
+/// at `points` evenly spaced ranks — used by the Fig. 2/4 harnesses.
+pub fn cdf_points(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (0..points)
+        .map(|i| {
+            let q = (i + 1) as f64 / points as f64;
+            (percentile_sorted(&v, q), q)
+        })
+        .collect()
+}
+
+/// Streaming histogram with fixed log-spaced buckets — cheap telemetry
+/// for queueing delays / latencies on the hot path.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// bucket i covers [base * ratio^i, base * ratio^(i+1))
+    base: f64,
+    ratio_ln: f64,
+    counts: Vec<u64>,
+    pub n: u64,
+    pub sum: f64,
+    pub max: f64,
+}
+
+impl LogHistogram {
+    pub fn new(base: f64, ratio: f64, buckets: usize) -> Self {
+        LogHistogram {
+            base,
+            ratio_ln: ratio.ln(),
+            counts: vec![0; buckets],
+            n: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    /// Default: 1µs .. ~18h at 1.5x resolution.
+    pub fn default_time() -> Self {
+        Self::new(1e-6, 1.5, 64)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        let idx = if x <= self.base {
+            0
+        } else {
+            (((x / self.base).ln() / self.ratio_ln) as usize)
+                .min(self.counts.len() - 1)
+        };
+        self.counts[idx] += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return self.base * (self.ratio_ln * (i as f64 + 0.5)).exp();
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = ys.iter().map(|y| -y).collect();
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_uncorrelated_bounded() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let ys = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0];
+        let r = pearson(&xs, &ys);
+        assert!((-1.0..=1.0).contains(&r));
+    }
+
+    #[test]
+    fn recall_perfect_and_zero() {
+        let actual = [10.0, 1.0, 2.0, 9.0, 3.0, 8.0, 4.0, 5.0, 6.0, 7.0];
+        // Perfect predictor.
+        assert_eq!(longtail_recall(&actual, &actual, 0.2), 1.0);
+        // Anti-predictor: predicts the reverse ranking.
+        let anti: Vec<f64> = actual.iter().map(|x| -x).collect();
+        assert_eq!(longtail_recall(&anti, &actual, 0.2), 0.0);
+    }
+
+    #[test]
+    fn recall_partial() {
+        let actual = [1.0, 2.0, 3.0, 4.0];
+        let pred = [4.0, 3.0, 1.0, 2.0]; // top-2 of pred = {0,1}; true {3,2}
+        assert_eq!(longtail_recall(&pred, &actual, 0.5), 0.0);
+        let pred2 = [1.0, 4.0, 2.0, 3.0]; // top-2 {1,3}; true {3,2} → 1 hit
+        assert_eq!(longtail_recall(&pred2, &actual, 0.5), 0.5);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = LogHistogram::default_time();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3); // 1ms..1s
+        }
+        assert_eq!(h.n, 1000);
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 0.2 && p50 < 1.0, "p50={p50}");
+        assert!((h.mean() - 0.5005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let xs: Vec<f64> = (0..100).map(|i| (i * 7 % 100) as f64).collect();
+        let cdf = cdf_points(&xs, 10);
+        for w in cdf.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 < w[1].1);
+        }
+    }
+}

@@ -1,0 +1,407 @@
+//! Agentic RL workload generator.
+//!
+//! Reproduces the statistical structure the paper's evaluation relies on
+//! (DESIGN.md §1): per-domain long-tailed token counts and tool latencies
+//! (Fig. 2, Table 1), GRPO prompt groups of 16 samples with large
+//! intra-group divergence (Fig. 5), and failure-driven trajectory
+//! extension (a failed tool call can spawn rectification steps — the
+//! mechanism behind identical prompts yielding 1-step vs 20-step
+//! trajectories).
+//!
+//! The generator is deterministic in its seed; every figure bench and
+//! test derives from the same traces.
+
+use crate::util::rng::Rng;
+
+/// Agentic task domain (paper §7: coding / search / math).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Domain {
+    Coding,
+    Search,
+    Math,
+}
+
+impl Domain {
+    pub const ALL: [Domain; 3] = [Domain::Coding, Domain::Search, Domain::Math];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Domain::Coding => "coding",
+            Domain::Search => "search",
+            Domain::Math => "math",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Domain> {
+        Some(match s {
+            "coding" => Domain::Coding,
+            "search" => Domain::Search,
+            "math" => Domain::Math,
+            _ => return None,
+        })
+    }
+
+    /// (mean steps, tokens/step lognormal mu, sigma, mean tool latency s,
+    /// tool failure probability). Tool latencies follow paper Table 1:
+    /// search ≫ coding ≫ math.
+    fn params(&self) -> (f64, f64, f64, f64, f64) {
+        match self {
+            Domain::Coding => (6.0, 5.2, 0.8, 0.45, 0.35),
+            Domain::Search => (4.0, 4.2, 0.7, 1.40, 0.20),
+            Domain::Math => (3.0, 4.8, 0.9, 0.05, 0.25),
+        }
+    }
+}
+
+/// One agentic step: an LLM generation segment followed by a tool call.
+#[derive(Debug, Clone)]
+pub struct StepSpec {
+    /// Tokens the LLM generates in this step (reasoning + tool args).
+    pub gen_tokens: usize,
+    /// Tokens of tool output ingested (prefill) before the next step.
+    pub tool_output_tokens: usize,
+    /// Wall-clock tool execution latency (seconds).
+    pub tool_latency: f64,
+    /// Whether the tool reported failure (drives rectification steps).
+    pub tool_failed: bool,
+}
+
+/// A complete agentic trajectory specification. The simulator and the
+/// real-serving path both *replay* these: generation segment lengths and
+/// tool behaviour are fixed by the spec, so policy comparisons are
+/// paired (same workload, different orchestration).
+#[derive(Debug, Clone)]
+pub struct TrajectorySpec {
+    pub id: usize,
+    /// Prompt identity: trajectories with the same prompt_id form a GRPO
+    /// group (paper: 16 samples per prompt).
+    pub prompt_id: usize,
+    pub group_idx: usize,
+    pub domain: Domain,
+    pub prompt_tokens: usize,
+    /// Length (tokens) of the step-1 plan — the paper's "strong semantic
+    /// indicator" feature.
+    pub plan_tokens: usize,
+    /// Latent difficulty in [0,1] — observable to the oracle predictor
+    /// only (and partially revealed to Heddle's predictor after step 1).
+    pub difficulty: f64,
+    pub temperature: f64,
+    pub steps: Vec<StepSpec>,
+}
+
+impl TrajectorySpec {
+    /// Total LLM-generated tokens (the paper's N_tokens).
+    pub fn total_tokens(&self) -> usize {
+        self.steps.iter().map(|s| s.gen_tokens).sum()
+    }
+
+    /// Total tokens ingested via prefill (prompt + tool outputs).
+    pub fn total_prefill_tokens(&self) -> usize {
+        self.prompt_tokens
+            + self.steps.iter().map(|s| s.tool_output_tokens).sum::<usize>()
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Total tool wall-clock time (the paper's T_tool).
+    pub fn tool_time(&self) -> f64 {
+        self.steps.iter().map(|s| s.tool_latency).sum()
+    }
+
+    /// Tokens remaining after the first `k` steps.
+    pub fn remaining_after(&self, k: usize) -> usize {
+        self.steps.iter().skip(k).map(|s| s.gen_tokens).sum()
+    }
+
+    /// Scale all token counts by `factor` (used to fit the real MiniQwen
+    /// max_seq=256 serving path while keeping the distribution shape).
+    pub fn scaled(&self, factor: f64) -> TrajectorySpec {
+        let mut t = self.clone();
+        t.prompt_tokens = ((t.prompt_tokens as f64 * factor) as usize).max(1);
+        t.plan_tokens = ((t.plan_tokens as f64 * factor) as usize).max(1);
+        for s in &mut t.steps {
+            s.gen_tokens = ((s.gen_tokens as f64 * factor) as usize).max(1);
+            s.tool_output_tokens =
+                ((s.tool_output_tokens as f64 * factor) as usize).max(1);
+        }
+        t
+    }
+}
+
+/// Workload generation parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub domain: Domain,
+    /// Number of distinct prompts in the rollout batch.
+    pub n_prompts: usize,
+    /// GRPO group size (paper: 16 samples per prompt).
+    pub group_size: usize,
+    /// Hard cap on generated tokens per trajectory (paper: 40K).
+    pub max_output_tokens: usize,
+    pub temperature: f64,
+    pub seed: u64,
+}
+
+impl WorkloadConfig {
+    pub fn new(domain: Domain, n_prompts: usize, seed: u64) -> Self {
+        WorkloadConfig {
+            domain,
+            n_prompts,
+            group_size: 16,
+            max_output_tokens: 40_000,
+            temperature: 1.0,
+            seed,
+        }
+    }
+
+    pub fn total_trajectories(&self) -> usize {
+        self.n_prompts * self.group_size
+    }
+}
+
+/// Generate the rollout batch: `n_prompts * group_size` trajectories.
+pub fn generate(cfg: &WorkloadConfig) -> Vec<TrajectorySpec> {
+    let mut rng = Rng::new(cfg.seed ^ 0x48454444); // "HEDD"
+    let mut out = Vec::with_capacity(cfg.total_trajectories());
+    for prompt_id in 0..cfg.n_prompts {
+        // Prompt-level latents shared by the whole GRPO group.
+        let prompt_difficulty = (rng.normal_ms(0.5, 0.22)).clamp(0.0, 1.0);
+        let prompt_tokens = rng.range(64, 512) as usize;
+        let mut prompt_rng = rng.fork(prompt_id as u64);
+        for group_idx in 0..cfg.group_size {
+            let id = out.len();
+            out.push(sample_trajectory(
+                &mut prompt_rng,
+                cfg,
+                id,
+                prompt_id,
+                group_idx,
+                prompt_difficulty,
+                prompt_tokens,
+            ));
+        }
+    }
+    out
+}
+
+fn sample_trajectory(
+    rng: &mut Rng,
+    cfg: &WorkloadConfig,
+    id: usize,
+    prompt_id: usize,
+    group_idx: usize,
+    prompt_difficulty: f64,
+    prompt_tokens: usize,
+) -> TrajectorySpec {
+    let (mean_steps, mu, sigma, tool_mean, fail_p) = cfg.domain.params();
+    // High sampling temperature ⇒ samples of one prompt diverge: the
+    // effective difficulty is a noisy draw around the prompt latent
+    // (paper Fig. 5: intra-group variance).
+    let noise = cfg.temperature * rng.normal_ms(0.0, 0.28);
+    let difficulty = (prompt_difficulty + noise).clamp(0.0, 1.0);
+
+    let target_steps =
+        1 + rng.poisson(mean_steps * (0.4 + 1.8 * difficulty)) as usize;
+    let mut steps = Vec::new();
+    let mut total_tokens = 0usize;
+    let mut budget_steps = target_steps;
+    while steps.len() < budget_steps && steps.len() < 64 {
+        let gen_tokens = (rng
+            .lognormal(mu * (0.8 + 0.4 * difficulty), sigma)
+            .round() as usize)
+            .clamp(8, 4000);
+        if total_tokens + gen_tokens > cfg.max_output_tokens {
+            // Hit the output cap: truncate like the serving engine would.
+            let left = cfg.max_output_tokens - total_tokens;
+            if left >= 8 {
+                steps.push(StepSpec {
+                    gen_tokens: left,
+                    tool_output_tokens: 0,
+                    tool_latency: 0.0,
+                    tool_failed: false,
+                });
+            }
+            break;
+        }
+        total_tokens += gen_tokens;
+        let tool_failed = rng.bool(fail_p * (0.5 + difficulty));
+        // Failures can spawn rectification steps — the paper's τ2 example.
+        if tool_failed && rng.bool(0.5) && budget_steps < 64 {
+            budget_steps += 1;
+        }
+        let tool_latency = rng.exponential(tool_mean);
+        let tool_output_tokens = (rng.lognormal(4.0, 0.6).round() as usize)
+            .clamp(8, 2000);
+        steps.push(StepSpec {
+            gen_tokens,
+            tool_output_tokens,
+            tool_latency,
+            tool_failed,
+        });
+    }
+    if steps.is_empty() {
+        steps.push(StepSpec {
+            gen_tokens: 8,
+            tool_output_tokens: 8,
+            tool_latency: rng.exponential(tool_mean),
+            tool_failed: false,
+        });
+    }
+    // Terminal step performs no tool call.
+    if let Some(last) = steps.last_mut() {
+        last.tool_latency = 0.0;
+        last.tool_output_tokens = 0;
+        last.tool_failed = false;
+    }
+    let plan_tokens =
+        ((50.0 + 350.0 * difficulty) * (0.8 + 0.4 * rng.f64())) as usize;
+    TrajectorySpec {
+        id,
+        prompt_id,
+        group_idx,
+        domain: cfg.domain,
+        prompt_tokens,
+        plan_tokens,
+        difficulty,
+        temperature: cfg.temperature,
+        steps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn gen(domain: Domain, n: usize, seed: u64) -> Vec<TrajectorySpec> {
+        generate(&WorkloadConfig::new(domain, n, seed))
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = gen(Domain::Coding, 10, 3);
+        let b = gen(Domain::Coding, 10, 3);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.total_tokens(), y.total_tokens());
+            assert_eq!(x.n_steps(), y.n_steps());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = gen(Domain::Coding, 10, 3);
+        let b = gen(Domain::Coding, 10, 4);
+        let ta: usize = a.iter().map(|t| t.total_tokens()).sum();
+        let tb: usize = b.iter().map(|t| t.total_tokens()).sum();
+        assert_ne!(ta, tb);
+    }
+
+    #[test]
+    fn group_structure() {
+        let cfg = WorkloadConfig::new(Domain::Math, 5, 0);
+        let ts = generate(&cfg);
+        assert_eq!(ts.len(), 80);
+        for (i, t) in ts.iter().enumerate() {
+            assert_eq!(t.id, i);
+            assert_eq!(t.prompt_id, i / 16);
+            assert_eq!(t.group_idx, i % 16);
+        }
+        // All members of a group share prompt length.
+        for g in ts.chunks(16) {
+            assert!(g.iter().all(|t| t.prompt_tokens == g[0].prompt_tokens));
+        }
+    }
+
+    #[test]
+    fn long_tail_fig2() {
+        // Paper Fig. 2/4: token counts are highly skewed —
+        // max > 4x median for the coding workload.
+        let ts = gen(Domain::Coding, 40, 7);
+        let totals: Vec<f64> =
+            ts.iter().map(|t| t.total_tokens() as f64).collect();
+        let median = stats::percentile(&totals, 0.5);
+        let max = stats::max(&totals);
+        assert!(
+            max > 4.0 * median,
+            "long tail missing: max={max} median={median}"
+        );
+    }
+
+    #[test]
+    fn intra_group_variance_fig5() {
+        // Identical prompts must yield divergent lengths (paper Fig. 5).
+        let ts = gen(Domain::Coding, 30, 1);
+        let mut any_divergent = 0;
+        for g in ts.chunks(16) {
+            let lens: Vec<f64> =
+                g.iter().map(|t| t.total_tokens() as f64).collect();
+            if stats::max(&lens) > 3.0 * stats::min(&lens).max(1.0) {
+                any_divergent += 1;
+            }
+        }
+        assert!(
+            any_divergent > 15,
+            "only {any_divergent}/30 groups diverge 3x"
+        );
+    }
+
+    #[test]
+    fn tool_latency_ordering_table1() {
+        // Paper Table 1: search tool ≫ coding tool ≫ math tool.
+        let mean_tool = |d: Domain| {
+            let ts = gen(d, 30, 11);
+            let all: Vec<f64> = ts
+                .iter()
+                .flat_map(|t| t.steps.iter().map(|s| s.tool_latency))
+                .filter(|l| *l > 0.0)
+                .collect();
+            stats::mean(&all)
+        };
+        let c = mean_tool(Domain::Coding);
+        let s = mean_tool(Domain::Search);
+        let m = mean_tool(Domain::Math);
+        assert!(s > c && c > m, "search={s} coding={c} math={m}");
+    }
+
+    #[test]
+    fn output_cap_respected() {
+        let mut cfg = WorkloadConfig::new(Domain::Coding, 40, 5);
+        cfg.max_output_tokens = 1000;
+        for t in generate(&cfg) {
+            assert!(t.total_tokens() <= 1000, "cap violated: {}", t.total_tokens());
+        }
+    }
+
+    #[test]
+    fn terminal_step_has_no_tool() {
+        for t in gen(Domain::Search, 10, 9) {
+            let last = t.steps.last().unwrap();
+            assert_eq!(last.tool_latency, 0.0);
+            assert!(!last.tool_failed);
+        }
+    }
+
+    #[test]
+    fn remaining_after_consistent() {
+        for t in gen(Domain::Math, 5, 13) {
+            assert_eq!(t.remaining_after(0), t.total_tokens());
+            assert_eq!(t.remaining_after(t.n_steps()), 0);
+            let k = t.n_steps() / 2;
+            let head: usize =
+                t.steps.iter().take(k).map(|s| s.gen_tokens).sum();
+            assert_eq!(t.remaining_after(k), t.total_tokens() - head);
+        }
+    }
+
+    #[test]
+    fn scaled_preserves_structure() {
+        let t = &gen(Domain::Coding, 2, 17)[0];
+        let s = t.scaled(0.01);
+        assert_eq!(s.n_steps(), t.n_steps());
+        assert!(s.total_tokens() < t.total_tokens());
+        assert!(s.steps.iter().all(|st| st.gen_tokens >= 1));
+    }
+}
