@@ -1,0 +1,868 @@
+//! Online trajectory-lifecycle invariant auditor + structured decision
+//! trace (the control plane's flight recorder).
+//!
+//! Heddle's core promise is trajectory-centric orchestration: every
+//! trajectory is scheduled, placed, migrated, and resized without ever
+//! being lost, duplicated, or over-committed (paper §4–§6). The
+//! [`Auditor`] checks that promise *online*: the scheduler, placement,
+//! migration planner, resource manager, router, control plane, simulator
+//! loop, and real serving loop emit typed [`AuditEvent`]s as they make
+//! decisions, and the auditor validates conservation invariants as the
+//! events stream in. It runs in debug/test builds automatically and
+//! behind `--audit` in the `sim` and `serve` CLI paths.
+//!
+//! ## Event schema
+//!
+//! Every event is recorded as `{t, seq, event, traj?, worker?, ...}` and
+//! can be dumped as JSONL (one event per line) for post-mortems:
+//!
+//! | event              | fields                     | emitted by        |
+//! |--------------------|----------------------------|-------------------|
+//! | `submitted`        | traj                       | sim / serve loop  |
+//! | `placed`           | traj, worker               | placement DP      |
+//! | `resized`          | worker, degree             | resource manager  |
+//! | `provisioned`      | workers, gpus, budget      | resource manager  |
+//! | `enqueued`         | traj, worker               | router/scheduler  |
+//! | `admitted`         | traj, worker               | scheduler         |
+//! | `preempted`        | traj, worker, kv_tokens    | scheduler         |
+//! | `tool_wait`        | traj, worker, step         | sim / serve loop  |
+//! | `tool_done`        | traj                       | tool manager      |
+//! | `migration_started`| traj, src, dst             | transmission sched|
+//! | `migrated`         | traj, src, dst             | migration planner |
+//! | `completed`        | traj, worker               | sim / serve loop  |
+//!
+//! ## Invariants checked
+//!
+//! 1. **Single residency** — each trajectory is in exactly one lifecycle
+//!    state (queued / running / tool-parked / done) on exactly one
+//!    worker; every transition must be legal (no double-admit, no admit
+//!    from a worker the trajectory is not queued on, no double-complete).
+//! 2. **Preempted KV accounted before re-admit** — a preempted
+//!    trajectory's KV stays on the evicting worker; it must be
+//!    re-admitted there unless an explicit migration re-accounted it.
+//! 3. **Slot conservation** — a worker's active set never exceeds its
+//!    slot capacity, and active counts never go negative.
+//! 4. **GPU budget** — the resource manager's allocation never sums to
+//!    more GPUs than the cluster budget.
+//! 5. **Completion conservation** — finished-trajectory count equals
+//!    submitted count, and nothing is left in-flight when the run drains
+//!    ([`Auditor::check_complete`]).
+//! 6. **Migration exclusivity** — at most one in-flight migration per
+//!    trajectory, never self-targeted, and every completion matches its
+//!    start.
+//!
+//! The decision trace ([`Auditor::decision_trace`]) is a time-free,
+//! canonical rendering of the orchestration decisions; it powers the
+//! differential check ([`diff_decisions`]) that two runs (e.g. sim vs
+//! serve, or two same-seed sims) made the same decisions.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One typed control-plane decision event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AuditEvent {
+    /// Trajectory entered the system.
+    Submitted { traj: usize },
+    /// Initial placement decision (DP partition → worker).
+    Placed { traj: usize, worker: usize },
+    /// Resource manager sized one worker (MP degree in GPUs).
+    Resized { worker: usize, degree: usize },
+    /// Allocation summary: total workers/GPUs against the budget.
+    Provisioned { workers: usize, gpus: usize, budget: usize },
+    /// Step request entered a worker's pending queue.
+    Enqueued { traj: usize, worker: usize },
+    /// Request promoted into the worker's active (decoding) set.
+    Admitted { traj: usize, worker: usize },
+    /// Active trajectory evicted; its KV persists on the worker.
+    Preempted { traj: usize, worker: usize, kv_tokens: usize },
+    /// Segment finished; trajectory parked in a tool call.
+    ToolWait { traj: usize, worker: usize, step: usize },
+    /// Tool call returned.
+    ToolDone { traj: usize },
+    /// KV transfer launched by the transmission scheduler.
+    MigrationStarted { traj: usize, src: usize, dst: usize },
+    /// KV transfer landed; the trajectory's KV now lives on `dst`.
+    Migrated { traj: usize, src: usize, dst: usize },
+    /// Trajectory finished its final segment.
+    Completed { traj: usize, worker: usize },
+}
+
+impl AuditEvent {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AuditEvent::Submitted { .. } => "submitted",
+            AuditEvent::Placed { .. } => "placed",
+            AuditEvent::Resized { .. } => "resized",
+            AuditEvent::Provisioned { .. } => "provisioned",
+            AuditEvent::Enqueued { .. } => "enqueued",
+            AuditEvent::Admitted { .. } => "admitted",
+            AuditEvent::Preempted { .. } => "preempted",
+            AuditEvent::ToolWait { .. } => "tool_wait",
+            AuditEvent::ToolDone { .. } => "tool_done",
+            AuditEvent::MigrationStarted { .. } => "migration_started",
+            AuditEvent::Migrated { .. } => "migrated",
+            AuditEvent::Completed { .. } => "completed",
+        }
+    }
+
+    /// Trajectory this event concerns (None for cluster-level events).
+    pub fn traj(&self) -> Option<usize> {
+        match *self {
+            AuditEvent::Submitted { traj }
+            | AuditEvent::Placed { traj, .. }
+            | AuditEvent::Enqueued { traj, .. }
+            | AuditEvent::Admitted { traj, .. }
+            | AuditEvent::Preempted { traj, .. }
+            | AuditEvent::ToolWait { traj, .. }
+            | AuditEvent::ToolDone { traj }
+            | AuditEvent::MigrationStarted { traj, .. }
+            | AuditEvent::Migrated { traj, .. }
+            | AuditEvent::Completed { traj, .. } => Some(traj),
+            AuditEvent::Resized { .. } | AuditEvent::Provisioned { .. } => {
+                None
+            }
+        }
+    }
+}
+
+/// A recorded event with its stream position and timestamp.
+#[derive(Debug, Clone, Copy)]
+pub struct Record {
+    pub seq: u64,
+    pub t: f64,
+    pub ev: AuditEvent,
+}
+
+impl Record {
+    /// One JSONL line for this record.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("seq".into(), Json::Num(self.seq as f64));
+        o.insert("t".into(), Json::Num(self.t));
+        o.insert("event".into(), Json::Str(self.ev.name().into()));
+        let mut put = |k: &str, v: usize| {
+            o.insert(k.into(), Json::Num(v as f64));
+        };
+        match self.ev {
+            AuditEvent::Submitted { traj } => put("traj", traj),
+            AuditEvent::Placed { traj, worker } => {
+                put("traj", traj);
+                put("worker", worker);
+            }
+            AuditEvent::Resized { worker, degree } => {
+                put("worker", worker);
+                put("degree", degree);
+            }
+            AuditEvent::Provisioned { workers, gpus, budget } => {
+                put("workers", workers);
+                put("gpus", gpus);
+                put("budget", budget);
+            }
+            AuditEvent::Enqueued { traj, worker }
+            | AuditEvent::Admitted { traj, worker }
+            | AuditEvent::Completed { traj, worker } => {
+                put("traj", traj);
+                put("worker", worker);
+            }
+            AuditEvent::Preempted { traj, worker, kv_tokens } => {
+                put("traj", traj);
+                put("worker", worker);
+                put("kv_tokens", kv_tokens);
+            }
+            AuditEvent::ToolWait { traj, worker, step } => {
+                put("traj", traj);
+                put("worker", worker);
+                put("step", step);
+            }
+            AuditEvent::ToolDone { traj } => put("traj", traj),
+            AuditEvent::MigrationStarted { traj, src, dst }
+            | AuditEvent::Migrated { traj, src, dst } => {
+                put("traj", traj);
+                put("src", src);
+                put("dst", dst);
+            }
+        }
+        Json::Obj(o)
+    }
+}
+
+/// One invariant violation, pinned to the event that exposed it.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub seq: u64,
+    pub t: f64,
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[seq {} t={:.6}] {}", self.seq, self.t, self.message)
+    }
+}
+
+/// Lifecycle state the auditor tracks per trajectory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Lifecycle {
+    /// Known (placed) but not yet enqueued.
+    New,
+    Queued { worker: usize },
+    Running { worker: usize },
+    ToolParked,
+    Done,
+}
+
+#[derive(Debug)]
+struct TrajAudit {
+    state: Lifecycle,
+    submitted: bool,
+    /// Worker currently holding this trajectory's KV prefix, if known.
+    kv_worker: Option<usize>,
+    /// Preempted and not yet re-admitted: the KV must be accounted (same
+    /// worker or an explicit migration) before the next admit.
+    preempted_pending: bool,
+    inflight_migration: Option<(usize, usize)>,
+}
+
+impl TrajAudit {
+    fn new() -> Self {
+        TrajAudit {
+            state: Lifecycle::New,
+            submitted: false,
+            kv_worker: None,
+            preempted_pending: false,
+            inflight_migration: None,
+        }
+    }
+}
+
+/// Streaming invariant checker over [`AuditEvent`]s.
+#[derive(Debug, Default)]
+pub struct Auditor {
+    /// Per-worker slot capacity (empty = capacity checks disabled).
+    slots: Vec<usize>,
+    /// Per-worker active-set size derived from the event stream.
+    active: Vec<usize>,
+    trajs: BTreeMap<usize, TrajAudit>,
+    submitted: usize,
+    completed: usize,
+    seq: u64,
+    events: Vec<Record>,
+    violations: Vec<Violation>,
+}
+
+impl Auditor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare per-worker slot capacities (enables invariant 3).
+    pub fn set_worker_slots(&mut self, slots: Vec<usize>) {
+        self.active.resize(slots.len(), 0);
+        self.slots = slots;
+    }
+
+    pub fn n_events(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn events(&self) -> &[Record] {
+        &self.events
+    }
+
+    pub fn violations(&self) -> &[Violation] {
+        &self.violations
+    }
+
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn submitted(&self) -> usize {
+        self.submitted
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    fn violate(&mut self, t: f64, message: String) {
+        self.violations.push(Violation { seq: self.seq, t, message });
+    }
+
+    fn worker_slot(&mut self, w: usize) -> &mut usize {
+        if w >= self.active.len() {
+            self.active.resize(w + 1, 0);
+        }
+        &mut self.active[w]
+    }
+
+    fn traj_entry(&mut self, id: usize) -> &mut TrajAudit {
+        self.trajs.entry(id).or_insert_with(TrajAudit::new)
+    }
+
+    /// Feed one event into the checker.
+    pub fn record(&mut self, t: f64, ev: AuditEvent) {
+        self.seq += 1;
+        self.events.push(Record { seq: self.seq, t, ev });
+        match ev {
+            AuditEvent::Submitted { traj } => {
+                let e = self.traj_entry(traj);
+                if e.submitted {
+                    self.violate(t, format!("traj {traj}: double submit"));
+                } else {
+                    self.traj_entry(traj).submitted = true;
+                    self.submitted += 1;
+                }
+            }
+            AuditEvent::Placed { traj, worker: _ } => {
+                // Placement is informational: it creates the entry so a
+                // later submit/enqueue finds a known trajectory.
+                self.traj_entry(traj);
+            }
+            AuditEvent::Resized { .. } => {}
+            AuditEvent::Provisioned { workers: _, gpus, budget } => {
+                if gpus > budget {
+                    self.violate(
+                        t,
+                        format!(
+                            "allocation uses {gpus} GPUs over budget {budget}"
+                        ),
+                    );
+                }
+            }
+            AuditEvent::Enqueued { traj, worker } => {
+                let state = self.traj_entry(traj).state;
+                let submitted = self.traj_entry(traj).submitted;
+                if !submitted {
+                    self.violate(
+                        t,
+                        format!("traj {traj}: enqueued before submit"),
+                    );
+                }
+                match state {
+                    Lifecycle::New | Lifecycle::ToolParked => {
+                        self.traj_entry(traj).state =
+                            Lifecycle::Queued { worker };
+                    }
+                    other => self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: enqueued on worker {worker} \
+                             from illegal state {other:?}"
+                        ),
+                    ),
+                }
+            }
+            AuditEvent::Admitted { traj, worker } => {
+                let state = self.traj_entry(traj).state;
+                match state {
+                    Lifecycle::Queued { worker: qw } if qw == worker => {
+                        self.traj_entry(traj).state =
+                            Lifecycle::Running { worker };
+                    }
+                    Lifecycle::Queued { worker: qw } => {
+                        self.violate(
+                            t,
+                            format!(
+                                "traj {traj}: admitted on worker {worker} \
+                                 but queued on worker {qw}"
+                            ),
+                        );
+                        self.traj_entry(traj).state =
+                            Lifecycle::Running { worker };
+                    }
+                    other => {
+                        self.violate(
+                            t,
+                            format!(
+                                "traj {traj}: admitted on worker {worker} \
+                                 from illegal state {other:?} (double \
+                                 admit / lost dequeue)"
+                            ),
+                        );
+                        self.traj_entry(traj).state =
+                            Lifecycle::Running { worker };
+                    }
+                }
+                // Invariant 2: preempted KV accounted before re-admit.
+                let (pending, kv) = {
+                    let e = self.traj_entry(traj);
+                    let out = (e.preempted_pending, e.kv_worker);
+                    e.preempted_pending = false;
+                    out
+                };
+                if pending && kv != Some(worker) {
+                    self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: preempted KV on {kv:?} not \
+                             accounted before re-admit on worker {worker}"
+                        ),
+                    );
+                }
+                // Invariant 3: slot conservation.
+                let n = {
+                    let slot = self.worker_slot(worker);
+                    *slot += 1;
+                    *slot
+                };
+                if let Some(&cap) = self.slots.get(worker) {
+                    if cap > 0 && n > cap {
+                        self.violate(
+                            t,
+                            format!(
+                                "worker {worker}: active set {n} exceeds \
+                                 {cap} slots"
+                            ),
+                        );
+                    }
+                }
+            }
+            AuditEvent::Preempted { traj, worker, kv_tokens: _ } => {
+                let state = self.traj_entry(traj).state;
+                match state {
+                    Lifecycle::Running { worker: rw } if rw == worker => {}
+                    other => self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: preempted on worker {worker} \
+                             from illegal state {other:?}"
+                        ),
+                    ),
+                }
+                {
+                    let e = self.traj_entry(traj);
+                    e.state = Lifecycle::Queued { worker };
+                    e.kv_worker = Some(worker);
+                    e.preempted_pending = true;
+                }
+                self.leave_worker(t, worker);
+            }
+            AuditEvent::ToolWait { traj, worker, step: _ } => {
+                let state = self.traj_entry(traj).state;
+                match state {
+                    Lifecycle::Running { worker: rw } if rw == worker => {}
+                    other => self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: tool-parked from worker {worker} \
+                             in illegal state {other:?}"
+                        ),
+                    ),
+                }
+                {
+                    let e = self.traj_entry(traj);
+                    e.state = Lifecycle::ToolParked;
+                    e.kv_worker = Some(worker);
+                }
+                self.leave_worker(t, worker);
+            }
+            AuditEvent::ToolDone { traj } => {
+                let state = self.traj_entry(traj).state;
+                if state != Lifecycle::ToolParked {
+                    self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: tool completion in illegal \
+                             state {state:?}"
+                        ),
+                    );
+                }
+            }
+            AuditEvent::MigrationStarted { traj, src, dst } => {
+                if src == dst {
+                    self.violate(
+                        t,
+                        format!("traj {traj}: self-migration {src}->{dst}"),
+                    );
+                }
+                let prev = self.traj_entry(traj).inflight_migration;
+                if let Some((ps, pd)) = prev {
+                    self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: migration {src}->{dst} started \
+                             while {ps}->{pd} is in flight"
+                        ),
+                    );
+                }
+                self.traj_entry(traj).inflight_migration = Some((src, dst));
+            }
+            AuditEvent::Migrated { traj, src, dst } => {
+                let inflight = self.traj_entry(traj).inflight_migration;
+                match inflight {
+                    Some((ps, pd)) if ps == src && pd == dst => {}
+                    other => self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: migration {src}->{dst} completed \
+                             but in-flight record is {other:?}"
+                        ),
+                    ),
+                }
+                let e = self.traj_entry(traj);
+                e.inflight_migration = None;
+                e.kv_worker = Some(dst);
+                // The transfer re-accounts any preempted KV.
+                e.preempted_pending = false;
+            }
+            AuditEvent::Completed { traj, worker } => {
+                let state = self.traj_entry(traj).state;
+                match state {
+                    Lifecycle::Running { worker: rw } if rw == worker => {}
+                    other => self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: completed on worker {worker} \
+                             from illegal state {other:?}"
+                        ),
+                    ),
+                }
+                self.traj_entry(traj).state = Lifecycle::Done;
+                self.completed += 1;
+                self.leave_worker(t, worker);
+            }
+        }
+    }
+
+    fn leave_worker(&mut self, t: f64, worker: usize) {
+        let slot = self.worker_slot(worker);
+        if *slot == 0 {
+            self.violate(
+                t,
+                format!("worker {worker}: active count underflow"),
+            );
+        } else {
+            *slot -= 1;
+        }
+    }
+
+    /// Invariant 5: call when the run has drained. Verifies completion
+    /// conservation and that nothing is stranded in-flight.
+    pub fn check_complete(&mut self, t: f64) {
+        self.seq += 1;
+        if self.completed != self.submitted {
+            let (c, s) = (self.completed, self.submitted);
+            self.violate(
+                t,
+                format!("completed {c} != submitted {s} (lost trajectory)"),
+            );
+        }
+        let stranded: Vec<usize> = self
+            .trajs
+            .iter()
+            .filter(|(_, e)| e.submitted && e.state != Lifecycle::Done)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in stranded {
+            let state = self.trajs[&id].state;
+            self.violate(
+                t,
+                format!("traj {id}: stranded in state {state:?} at drain"),
+            );
+        }
+        let busy: Vec<usize> = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(w, _)| w)
+            .collect();
+        for w in busy {
+            let n = self.active[w];
+            self.violate(
+                t,
+                format!("worker {w}: {n} active trajectories at drain"),
+            );
+        }
+    }
+
+    /// Panic with a full report if any invariant was violated.
+    pub fn assert_clean(&self, label: &str) {
+        assert!(
+            self.ok(),
+            "audit [{label}]: {} invariant violation(s):\n{}",
+            self.violations.len(),
+            self.report_violations()
+        );
+    }
+
+    pub fn report_violations(&self) -> String {
+        self.violations
+            .iter()
+            .map(|v| format!("  {v}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Full event stream as JSONL (one event per line) — the
+    /// per-trajectory timeline dump behind `--audit`.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.events {
+            out.push_str(&r.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSONL timeline of a single trajectory (post-mortem view).
+    pub fn timeline_jsonl(&self, traj: usize) -> String {
+        let mut out = String::new();
+        for r in &self.events {
+            if r.ev.traj() == Some(traj) {
+                out.push_str(&r.to_json().to_string());
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Canonical, time-free rendering of the orchestration decisions.
+    /// Two runs that made the same decisions in the same order produce
+    /// identical traces regardless of wall-clock timing.
+    pub fn decision_trace(&self) -> Vec<String> {
+        self.events
+            .iter()
+            .map(|r| {
+                let ev = &r.ev;
+                match *ev {
+                    AuditEvent::Submitted { traj } => {
+                        format!("submit t{traj}")
+                    }
+                    AuditEvent::Placed { traj, worker } => {
+                        format!("place t{traj} w{worker}")
+                    }
+                    AuditEvent::Resized { worker, degree } => {
+                        format!("resize w{worker} mp{degree}")
+                    }
+                    AuditEvent::Provisioned { workers, gpus, .. } => {
+                        format!("provision {workers}w {gpus}g")
+                    }
+                    AuditEvent::Enqueued { traj, worker } => {
+                        format!("enqueue t{traj} w{worker}")
+                    }
+                    AuditEvent::Admitted { traj, worker } => {
+                        format!("admit t{traj} w{worker}")
+                    }
+                    AuditEvent::Preempted { traj, worker, .. } => {
+                        format!("preempt t{traj} w{worker}")
+                    }
+                    AuditEvent::ToolWait { traj, worker, step } => {
+                        format!("toolwait t{traj} w{worker} s{step}")
+                    }
+                    AuditEvent::ToolDone { traj } => {
+                        format!("tooldone t{traj}")
+                    }
+                    AuditEvent::MigrationStarted { traj, src, dst } => {
+                        format!("migrate-start t{traj} {src}->{dst}")
+                    }
+                    AuditEvent::Migrated { traj, src, dst } => {
+                        format!("migrate t{traj} {src}->{dst}")
+                    }
+                    AuditEvent::Completed { traj, worker } => {
+                        format!("complete t{traj} w{worker}")
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+/// Differential decision check: where do two runs' orchestration
+/// decisions diverge? Returns human-readable divergences (empty =
+/// identical decisions), capped at 20 entries.
+pub fn diff_decisions(a: &Auditor, b: &Auditor) -> Vec<String> {
+    let ta = a.decision_trace();
+    let tb = b.decision_trace();
+    let mut out = Vec::new();
+    for (i, (x, y)) in ta.iter().zip(&tb).enumerate() {
+        if x != y {
+            out.push(format!("decision {i}: {x:?} vs {y:?}"));
+            if out.len() >= 20 {
+                return out;
+            }
+        }
+    }
+    if ta.len() != tb.len() {
+        out.push(format!(
+            "trace length {} vs {} (one run made more decisions)",
+            ta.len(),
+            tb.len()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clean_single_lifecycle() -> Auditor {
+        let mut a = Auditor::new();
+        a.set_worker_slots(vec![2, 2]);
+        a.record(0.0, AuditEvent::Resized { worker: 0, degree: 1 });
+        a.record(0.0, AuditEvent::Resized { worker: 1, degree: 1 });
+        a.record(
+            0.0,
+            AuditEvent::Provisioned { workers: 2, gpus: 2, budget: 2 },
+        );
+        a.record(0.0, AuditEvent::Placed { traj: 7, worker: 0 });
+        a.record(0.0, AuditEvent::Submitted { traj: 7 });
+        a.record(0.0, AuditEvent::Enqueued { traj: 7, worker: 0 });
+        a.record(0.1, AuditEvent::Admitted { traj: 7, worker: 0 });
+        a.record(
+            0.5,
+            AuditEvent::ToolWait { traj: 7, worker: 0, step: 0 },
+        );
+        a.record(0.9, AuditEvent::ToolDone { traj: 7 });
+        a.record(0.9, AuditEvent::Enqueued { traj: 7, worker: 0 });
+        a.record(1.0, AuditEvent::Admitted { traj: 7, worker: 0 });
+        a.record(1.5, AuditEvent::Completed { traj: 7, worker: 0 });
+        a
+    }
+
+    #[test]
+    fn clean_lifecycle_passes() {
+        let mut a = clean_single_lifecycle();
+        a.check_complete(2.0);
+        assert!(a.ok(), "{}", a.report_violations());
+        assert_eq!(a.submitted(), 1);
+        assert_eq!(a.completed(), 1);
+    }
+
+    #[test]
+    fn double_admit_fails_loudly() {
+        let mut a = Auditor::new();
+        a.set_worker_slots(vec![4]);
+        a.record(0.0, AuditEvent::Submitted { traj: 1 });
+        a.record(0.0, AuditEvent::Enqueued { traj: 1, worker: 0 });
+        a.record(0.1, AuditEvent::Admitted { traj: 1, worker: 0 });
+        a.record(0.2, AuditEvent::Admitted { traj: 1, worker: 0 });
+        assert!(!a.ok());
+        assert!(
+            a.report_violations().contains("double"),
+            "{}",
+            a.report_violations()
+        );
+    }
+
+    #[test]
+    fn lost_trajectory_detected_at_drain() {
+        let mut a = Auditor::new();
+        a.record(0.0, AuditEvent::Submitted { traj: 1 });
+        a.record(0.0, AuditEvent::Enqueued { traj: 1, worker: 0 });
+        a.check_complete(1.0);
+        assert!(!a.ok());
+        let r = a.report_violations();
+        assert!(r.contains("lost trajectory") && r.contains("stranded"));
+    }
+
+    #[test]
+    fn slot_overflow_detected() {
+        let mut a = Auditor::new();
+        a.set_worker_slots(vec![1]);
+        for id in 0..2 {
+            a.record(0.0, AuditEvent::Submitted { traj: id });
+            a.record(0.0, AuditEvent::Enqueued { traj: id, worker: 0 });
+            a.record(0.1, AuditEvent::Admitted { traj: id, worker: 0 });
+        }
+        assert!(!a.ok());
+        assert!(a.report_violations().contains("exceeds 1 slots"));
+    }
+
+    #[test]
+    fn gpu_budget_overflow_detected() {
+        let mut a = Auditor::new();
+        a.record(
+            0.0,
+            AuditEvent::Provisioned { workers: 4, gpus: 9, budget: 8 },
+        );
+        assert!(!a.ok());
+    }
+
+    #[test]
+    fn preempted_kv_must_be_accounted() {
+        let mut a = Auditor::new();
+        a.set_worker_slots(vec![1, 1]);
+        a.record(0.0, AuditEvent::Submitted { traj: 3 });
+        a.record(0.0, AuditEvent::Enqueued { traj: 3, worker: 0 });
+        a.record(0.1, AuditEvent::Admitted { traj: 3, worker: 0 });
+        a.record(
+            0.2,
+            AuditEvent::Preempted { traj: 3, worker: 0, kv_tokens: 40 },
+        );
+        // Illegal: the scheduler "loses" the queued victim and a fresh
+        // admit appears on another worker without a migration.
+        a.record(0.3, AuditEvent::Admitted { traj: 3, worker: 1 });
+        assert!(!a.ok());
+        assert!(a.report_violations().contains("preempted KV"));
+    }
+
+    #[test]
+    fn migration_reaccounts_preempted_kv() {
+        let mut a = Auditor::new();
+        a.set_worker_slots(vec![1, 1]);
+        a.record(0.0, AuditEvent::Submitted { traj: 3 });
+        a.record(0.0, AuditEvent::Enqueued { traj: 3, worker: 0 });
+        a.record(0.1, AuditEvent::Admitted { traj: 3, worker: 0 });
+        a.record(
+            0.2,
+            AuditEvent::Preempted { traj: 3, worker: 0, kv_tokens: 40 },
+        );
+        a.record(
+            0.3,
+            AuditEvent::MigrationStarted { traj: 3, src: 0, dst: 1 },
+        );
+        a.record(0.4, AuditEvent::Migrated { traj: 3, src: 0, dst: 1 });
+        // Still queued on worker 0 though — cross-worker admit is the
+        // state-machine violation, not the KV one.
+        a.record(0.5, AuditEvent::Admitted { traj: 3, worker: 1 });
+        let r = a.report_violations();
+        assert!(!r.contains("preempted KV"), "{r}");
+    }
+
+    #[test]
+    fn overlapping_migrations_detected() {
+        let mut a = Auditor::new();
+        a.record(
+            0.0,
+            AuditEvent::MigrationStarted { traj: 5, src: 0, dst: 1 },
+        );
+        a.record(
+            0.1,
+            AuditEvent::MigrationStarted { traj: 5, src: 1, dst: 2 },
+        );
+        assert!(!a.ok());
+        assert!(a.report_violations().contains("in flight"));
+    }
+
+    #[test]
+    fn jsonl_is_parseable() {
+        let a = clean_single_lifecycle();
+        let text = a.to_jsonl();
+        assert_eq!(text.lines().count(), a.n_events());
+        for line in text.lines() {
+            let v = Json::parse(line).expect("every line parses");
+            assert!(v.get("event").is_ok());
+            assert!(v.get("seq").is_ok());
+            assert!(v.get("t").is_ok());
+        }
+        // Single-trajectory timeline excludes cluster-level events.
+        let tl = a.timeline_jsonl(7);
+        assert_eq!(tl.lines().count(), a.n_events() - 3);
+    }
+
+    #[test]
+    fn decision_diff_finds_divergence() {
+        let a = clean_single_lifecycle();
+        let b = clean_single_lifecycle();
+        assert!(diff_decisions(&a, &b).is_empty());
+        let mut c = clean_single_lifecycle();
+        c.record(9.0, AuditEvent::Submitted { traj: 99 });
+        let d = diff_decisions(&a, &c);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].contains("length"));
+    }
+}

@@ -80,7 +80,7 @@ impl ControlPlane {
             } else {
                 history.iter().map(|t| t.total_tokens() as f64).collect()
             };
-            totals.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            totals.sort_by(|a, b| b.total_cmp(a));
             // Quantile-resample to the batch size.
             let n = specs.len().max(1);
             let profile: Vec<(usize, f64)> = (0..n)
@@ -168,6 +168,29 @@ impl ControlPlane {
 
     pub fn n_workers(&self) -> usize {
         self.allocation.n_workers()
+    }
+
+    /// Emit the provisioning decisions (§6 resource allocation) into an
+    /// auditor: one `Resized` per worker plus the `Provisioned` summary
+    /// the GPU-budget invariant is checked against.
+    pub fn audit_provision(
+        &self,
+        auditor: &mut crate::audit::Auditor,
+        t: f64,
+    ) {
+        for (worker, &degree) in self.allocation.degrees.iter().enumerate()
+        {
+            auditor
+                .record(t, crate::audit::AuditEvent::Resized { worker, degree });
+        }
+        auditor.record(
+            t,
+            crate::audit::AuditEvent::Provisioned {
+                workers: self.allocation.n_workers(),
+                gpus: self.allocation.total_gpus(),
+                budget: self.cfg.cluster.n_gpus,
+            },
+        );
     }
 
     /// Per-worker contention-free token time (seconds).

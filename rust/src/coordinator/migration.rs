@@ -125,11 +125,8 @@ impl TransmissionScheduler {
     /// pending requests in descending predicted length, selecting any
     /// whose endpoints are both free, marking endpoints busy as we go.
     pub fn next_batch(&mut self) -> Vec<MigrationRequest> {
-        self.pending.sort_by(|a, b| {
-            b.predicted_len
-                .partial_cmp(&a.predicted_len)
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
+        self.pending
+            .sort_by(|a, b| b.predicted_len.total_cmp(&a.predicted_len));
         let mut batch = Vec::new();
         let mut keep = Vec::new();
         for req in self.pending.drain(..) {

@@ -275,7 +275,7 @@ pub fn build_items(
     chunk: usize,
 ) -> Vec<PlaceItem> {
     let mut sorted: Vec<(usize, f64)> = preds.to_vec();
-    sorted.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    sorted.sort_by(|a, b| b.1.total_cmp(&a.1));
     let mut items = Vec::new();
     let mut i = 0;
     while i < sorted.len() {
@@ -339,7 +339,9 @@ pub fn presorted_dp_workers(
     let m = workers.len();
     assert!(m > 0, "need at least one worker");
     debug_assert!(
-        items.windows(2).all(|w| w[0].length >= w[1].length),
+        items
+            .windows(2)
+            .all(|w| w[0].length.total_cmp(&w[1].length).is_ge()),
         "items must be sorted descending"
     );
     if n == 0 {
@@ -586,6 +588,27 @@ mod tests {
     }
 
     #[test]
+    fn nan_prediction_does_not_panic_or_lose_items() {
+        // Regression: build_items sorted with `partial_cmp(..).unwrap()`
+        // and panicked the whole placement pass on one NaN prediction.
+        let preds =
+            vec![(0, 400.0), (1, f64::NAN), (2, 90.0), (3, 10.0)];
+        let items = build_items(&preds, 30.0, 4);
+        let mut covered: Vec<usize> =
+            items.iter().flat_map(|it| it.ids.iter().copied()).collect();
+        covered.sort_unstable();
+        assert_eq!(covered, vec![0, 1, 2, 3], "every trajectory placed");
+        let p = presorted_dp(&items, &[0.01, 0.01], &interf());
+        let placed: usize = p.groups.iter().map(|g| g.len()).sum();
+        assert_eq!(placed, preds.len(), "groups cover every trajectory id");
+        // Un-aggregated path (one item per trajectory) as well.
+        let singles = items_from(&[400.0, f64::NAN, 90.0]);
+        let p2 = presorted_dp(&singles, &[0.01, 0.01], &interf());
+        let placed2: usize = p2.groups.iter().map(|g| g.len()).sum();
+        assert_eq!(placed2, 3, "NaN item must still be assigned somewhere");
+    }
+
+    #[test]
     fn matches_naive_dp() {
         let mut rng = Rng::new(1);
         for _ in 0..30 {
@@ -593,7 +616,7 @@ mod tests {
             let m = 1 + rng.usize(6);
             let mut lengths: Vec<f64> =
                 (0..n).map(|_| rng.lognormal(5.0, 1.0)).collect();
-            lengths.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            lengths.sort_by(|a, b| b.total_cmp(a));
             let items = items_from(&lengths);
             let times: Vec<f64> =
                 (0..m).map(|_| 0.005 + rng.f64() * 0.02).collect();
@@ -617,7 +640,7 @@ mod tests {
             let m = 1 + rng.usize(3);
             let mut lengths: Vec<f64> =
                 (0..n).map(|_| rng.lognormal(4.0, 1.2)).collect();
-            lengths.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            lengths.sort_by(|a, b| b.total_cmp(a));
             let times = vec![0.01; m];
             let dp = presorted_dp(&items_from(&lengths), &times, &interf());
             let brute = brute_force_optimal(&lengths, &times, &interf());
@@ -637,7 +660,7 @@ mod tests {
             let m = 1 + rng.usize(5);
             let mut lengths: Vec<f64> =
                 (0..n).map(|_| rng.lognormal(5.0, 1.0)).collect();
-            lengths.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            lengths.sort_by(|a, b| b.total_cmp(a));
             let items = items_from(&lengths);
             let times: Vec<f64> =
                 (0..m).map(|_| 0.004 + rng.f64() * 0.04).collect();
@@ -673,7 +696,7 @@ mod tests {
             let m = 1 + rng.usize(8);
             let mut preds: Vec<(usize, f64)> =
                 (0..n).map(|i| (i, rng.lognormal(5.0, 1.0))).collect();
-            preds.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            preds.sort_by(|a, b| b.1.total_cmp(&a.1));
             let items = build_items(&preds, 30.0, 4);
             let times = vec![0.01; m];
             let p = presorted_dp(&items, &times, &interf());

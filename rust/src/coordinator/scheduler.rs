@@ -27,6 +27,11 @@ pub struct StepRequest {
     pub first_seq: u64,
 }
 
+/// Absolute preemption floor (predicted tokens). A pending request
+/// never evicts an active one unless its prediction clears this bar,
+/// even when the relative 2x margin is vacuous (active minimum ~0).
+pub const PREEMPT_FLOOR: f64 = 64.0;
+
 /// Effective priority: larger = runs earlier.
 fn rank(kind: SchedulerKind, r: &StepRequest) -> f64 {
     match kind {
@@ -60,10 +65,25 @@ impl PartialOrd for HeapEntry {
 }
 impl Ord for HeapEntry {
     fn cmp(&self, other: &Self) -> Ordering {
+        // total_cmp: a non-finite rank (already sanitized at push, but
+        // belt-and-braces) still yields a total order instead of the
+        // transitivity-breaking `unwrap_or(Equal)` it replaced.
         self.rank
-            .partial_cmp(&other.rank)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&other.rank)
             .then_with(|| other.seq.cmp(&self.seq)) // earlier seq first
+    }
+}
+
+/// Clamp a predicted length to a finite, heap-safe value. The predictor
+/// can emit NaN/±inf on degenerate feature vectors (e.g. an untrained
+/// head); those must not reach [`HeapEntry`] ordering or the preemption
+/// test, so every `predicted_len` is sanitized at the queue boundary.
+pub fn sanitize_predicted_len(x: f64) -> f64 {
+    const MAX_PREDICTED: f64 = 1e12;
+    if x.is_nan() {
+        0.0
+    } else {
+        x.clamp(-MAX_PREDICTED, MAX_PREDICTED)
     }
 }
 
@@ -94,6 +114,8 @@ impl SchedulerQueue {
     /// Enqueue a step request (Algorithm 1 lines 1-4: the priority is the
     /// progressive prediction supplied by the caller).
     pub fn push(&mut self, req: StepRequest) {
+        let mut req = req;
+        req.predicted_len = sanitize_predicted_len(req.predicted_len);
         self.heap.push(HeapEntry { rank: rank(self.kind, &req), seq: req.seq, req });
     }
 
@@ -111,14 +133,20 @@ impl SchedulerQueue {
     /// `active_min_predicted`? Only PPS preempts; the baselines run
     /// requests to step completion. A 2x margin guards against
     /// prediction-noise churn: evicting an active request costs a slot
-    /// swap, so the pending one must be *materially* longer.
+    /// swap, so the pending one must be *materially* longer. The margin
+    /// alone is vacuous when the active minimum is 0.0 (any pending
+    /// request would evict, thrashing forever), so an absolute floor
+    /// applies as well: the pending prediction must clear
+    /// [`PREEMPT_FLOOR`] tokens regardless of the victim's priority.
     pub fn should_preempt(&self, active_min_predicted: f64) -> bool {
         const PREEMPT_MARGIN: f64 = 2.0;
         if self.kind != SchedulerKind::Pps {
             return false;
         }
         match self.heap.peek() {
-            Some(top) => top.rank > active_min_predicted * PREEMPT_MARGIN,
+            Some(top) => {
+                top.rank > (active_min_predicted * PREEMPT_MARGIN).max(PREEMPT_FLOOR)
+            }
             None => false,
         }
     }
@@ -198,10 +226,7 @@ impl ActiveSet {
 
     /// Lowest-priority active member (the preemption victim r_min).
     pub fn min_member(&self) -> Option<(usize, f64)> {
-        self.members
-            .iter()
-            .copied()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal))
+        self.members.iter().copied().min_by(|a, b| a.1.total_cmp(&b.1))
     }
 
     pub fn ids(&self) -> impl Iterator<Item = usize> + '_ {
@@ -321,6 +346,59 @@ mod tests {
         let mut rr = SchedulerQueue::new(SchedulerKind::RoundRobin);
         rr.push(req(1, 800.0, 0));
         assert!(!rr.should_preempt(0.0), "baselines never preempt");
+    }
+
+    #[test]
+    fn zero_priority_active_does_not_preempt_below_floor() {
+        // Regression: with an active minimum of 0.0 the 2x margin is
+        // vacuous — before the absolute floor, *any* pending request
+        // evicted, churning forever.
+        let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+        q.push(req(1, PREEMPT_FLOOR / 2.0, 0));
+        assert!(
+            !q.should_preempt(0.0),
+            "short pending request must not evict a zero-priority victim"
+        );
+        let mut big = SchedulerQueue::new(SchedulerKind::Pps);
+        big.push(req(2, PREEMPT_FLOOR * 2.0, 1));
+        assert!(
+            big.should_preempt(0.0),
+            "materially long pending request still preempts"
+        );
+        // The floor never *adds* preemptions: above it, the 2x margin
+        // is unchanged.
+        assert!(!big.should_preempt(PREEMPT_FLOOR * 2.0));
+    }
+
+    #[test]
+    fn non_finite_predictions_are_sanitized_at_push() {
+        // Regression: NaN ranks silently corrupted heap order via
+        // `unwrap_or(Equal)`; ±inf starved/starved-out everything else.
+        let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+        q.push(req(1, f64::NAN, 0));
+        q.push(req(2, 300.0, 1));
+        q.push(req(3, f64::INFINITY, 2));
+        q.push(req(4, f64::NEG_INFINITY, 3));
+        q.push(req(5, 100.0, 4));
+        let drained = q.drain_ordered();
+        assert_eq!(drained.len(), 5, "no request may be lost");
+        for r in &drained {
+            assert!(
+                r.predicted_len.is_finite(),
+                "traj {} kept non-finite prediction {}",
+                r.traj_id,
+                r.predicted_len
+            );
+        }
+        // +inf clamps to the finite max (runs first), NaN maps to 0.0
+        // (runs after real predictions), -inf clamps to the finite min.
+        let order: Vec<usize> =
+            drained.iter().map(|r| r.traj_id).collect();
+        assert_eq!(order, vec![3, 2, 5, 1, 4]);
+        // And a NaN never panics the preemption test either.
+        let mut p = SchedulerQueue::new(SchedulerKind::Pps);
+        p.push(req(9, f64::NAN, 9));
+        assert!(!p.should_preempt(100.0));
     }
 
     #[test]

@@ -9,6 +9,12 @@
 //! See DESIGN.md for the system inventory and experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
+// House style: configs are built as `let mut cfg = X::default()` plus
+// field tweaks, which is clearer than struct-update syntax for nested
+// config trees.
+#![allow(clippy::field_reassign_with_default)]
+
+pub mod audit;
 pub mod config;
 pub mod coordinator;
 pub mod figures;

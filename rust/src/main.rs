@@ -9,6 +9,8 @@
 //!
 //! Flags go AFTER positional args: `heddle simulate --gpus 64 --prompts 400`.
 
+#![allow(clippy::field_reassign_with_default)]
+
 use heddle::config::{ModelCost, PolicyConfig, SimConfig};
 use heddle::figures as figs;
 use heddle::predictor::history_workload;
@@ -16,6 +18,25 @@ use heddle::sim::simulate;
 use heddle::util::cli::Args;
 use heddle::workload::{generate, Domain, WorkloadConfig};
 use std::path::Path;
+
+/// Dump the auditor's decision-event stream as JSONL (`--audit`,
+/// destination overridable with `--audit-out <path>`).
+fn write_audit(
+    args: &Args,
+    audit: &heddle::audit::Auditor,
+) -> anyhow::Result<()> {
+    let path = args.get_or("audit-out", "audit.jsonl").to_string();
+    std::fs::write(&path, audit.to_jsonl())?;
+    println!(
+        "audit: {} events, {} violations -> {path}",
+        audit.n_events(),
+        audit.violations().len()
+    );
+    if !audit.ok() {
+        println!("{}", audit.report_violations());
+    }
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -38,6 +59,7 @@ fn main() -> anyhow::Result<()> {
                 max_batch: args.get_usize("batch", 8),
                 policy,
                 seed: params.seed,
+                audit: args.flag("audit"),
                 ..Default::default()
             };
             let domain = Domain::parse(args.get_or("domain", "coding"))
@@ -59,6 +81,11 @@ fn main() -> anyhow::Result<()> {
                 out.tokens_generated,
                 out.throughput()
             );
+            if args.flag("audit") {
+                if let Some(a) = &out.audit {
+                    write_audit(&args, a)?;
+                }
+            }
         }
         "simulate" => {
             let model = ModelCost::by_name(args.get_or("model", "qwen3-14b"))
@@ -81,8 +108,15 @@ fn main() -> anyhow::Result<()> {
                 params.seed,
             ));
             let history = history_workload(domain, params.seed);
-            let r = simulate(&cfg, &history, &specs);
-            println!("{}", r.summary(args.get_or("policy", "heddle")));
+            if args.flag("audit") {
+                let (r, audit) =
+                    heddle::sim::simulate_audited(&cfg, &history, &specs);
+                println!("{}", r.summary(args.get_or("policy", "heddle")));
+                write_audit(&args, &audit)?;
+            } else {
+                let r = simulate(&cfg, &history, &specs);
+                println!("{}", r.summary(args.get_or("policy", "heddle")));
+            }
         }
         "train" => {
             let mut cfg = SimConfig::default();
@@ -218,7 +252,8 @@ fn main() -> anyhow::Result<()> {
                  bench-fig13|bench-fig14|bench-fig15|bench-fig16|\
                  bench-table1|bench-table2|bench-ablation>\n\
                  flags: --gpus N --prompts N --seed N --model qwen3-14b \
-                 --policy heddle|verl|verl*|slime --domain coding|search|math"
+                 --policy heddle|verl|verl*|slime --domain coding|search|math \
+                 --audit-out FILE --audit"
             );
         }
     }

@@ -1,0 +1,107 @@
+//! Stub engine used when the crate is built **without** the `pjrt`
+//! feature (the `xla` crate and its PJRT CPU client are optional; CI and
+//! toolchain-only environments build this instead).
+//!
+//! The public surface mirrors [`engine`](super) exactly — `TrajKv` and
+//! `DecodeOut` are the same pure-Rust types, and `Engine` exposes the
+//! same methods — so the simulator, serving path, profiler, and tests
+//! all typecheck identically. Any attempt to actually *load* artifacts
+//! fails with a clear error; the simulation paths (which never touch the
+//! engine) are unaffected.
+
+use super::manifest::Manifest;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// One trajectory's host-resident KV cache: `[L, Hkv, S, D]` for K and V.
+#[derive(Debug, Clone)]
+pub struct TrajKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Valid tokens in the ring.
+    pub len: usize,
+}
+
+impl TrajKv {
+    pub fn empty(floats: usize) -> Self {
+        TrajKv { k: vec![0.0; floats], v: vec![0.0; floats], len: 0 }
+    }
+
+    /// Bytes this cache occupies (both K and V) — migration volume.
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+/// Result of one decode step.
+#[derive(Debug)]
+pub struct DecodeOut {
+    /// `[B, vocab]` row-major logits.
+    pub logits: Vec<f32>,
+    pub vocab: usize,
+}
+
+impl DecodeOut {
+    pub fn row(&self, b: usize) -> &[f32] {
+        &self.logits[b * self.vocab..(b + 1) * self.vocab]
+    }
+}
+
+pub struct Engine {
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Always fails: real execution needs the `pjrt` feature.
+    pub fn load(_dir: &Path) -> Result<Engine> {
+        bail!(
+            "built without the `pjrt` feature: the PJRT engine is \
+             unavailable (rebuild with `--features pjrt`)"
+        );
+    }
+
+    pub fn new_kv(&self) -> TrajKv {
+        TrajKv::empty(self.manifest.model.kv_floats_per_traj())
+    }
+
+    /// Smallest compiled decode bucket that fits `n` trajectories.
+    pub fn decode_bucket(&self, n: usize) -> Result<usize> {
+        bail!("no decode bucket >= {n}: pjrt feature disabled");
+    }
+
+    /// Smallest compiled extend bucket (batch, chunk) fitting the request.
+    pub fn extend_bucket(
+        &self,
+        batch: usize,
+        chunk: usize,
+    ) -> Result<(usize, usize)> {
+        bail!("no extend bucket >= ({batch},{chunk}): pjrt feature disabled");
+    }
+
+    pub fn max_extend_chunk(&self) -> usize {
+        0
+    }
+
+    /// One decode step for up to `bucket` trajectories.
+    pub fn decode_step(
+        &self,
+        _entries: &mut [(i32, &mut TrajKv)],
+    ) -> Result<DecodeOut> {
+        bail!("decode_step: pjrt feature disabled");
+    }
+
+    /// Ingest `tokens` into a single trajectory's KV at its current
+    /// length (prompt prefill or tool-output extension).
+    pub fn extend(
+        &self,
+        _kv: &mut TrajKv,
+        _tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        bail!("extend: pjrt feature disabled");
+    }
+
+    /// Predict log1p(remaining tokens) for feature rows `[n, F]`.
+    pub fn predict(&self, _features: &[f32]) -> Result<Vec<f32>> {
+        bail!("predict: pjrt feature disabled");
+    }
+}

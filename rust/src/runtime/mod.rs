@@ -2,6 +2,10 @@
 //! and serves model execution from the Rust request path. Python is never
 //! on this path.
 
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 pub mod manifest;
 pub mod profiler;

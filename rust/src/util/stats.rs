@@ -7,7 +7,7 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, q)
 }
 
@@ -87,7 +87,7 @@ pub fn longtail_recall(predicted: &[f64], actual: &[f64], frac: f64) -> f64 {
     let k = ((n as f64 * frac).ceil() as usize).clamp(1, n);
     let top_k = |xs: &[f64]| -> Vec<usize> {
         let mut idx: Vec<usize> = (0..n).collect();
-        idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+        idx.sort_by(|&a, &b| xs[b].total_cmp(&xs[a]));
         idx.truncate(k);
         idx
     };
@@ -104,7 +104,7 @@ pub fn longtail_recall(predicted: &[f64], actual: &[f64], frac: f64) -> f64 {
 /// at `points` evenly spaced ranks — used by the Fig. 2/4 harnesses.
 pub fn cdf_points(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     (0..points)
         .map(|i| {
             let q = (i + 1) as f64 / points as f64;
@@ -252,6 +252,24 @@ mod tests {
         let p50 = h.quantile(0.5);
         assert!(p50 > 0.2 && p50 < 1.0, "p50={p50}");
         assert!((h.mean() - 0.5005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_samples_never_panic_sorts() {
+        // Regression: these sorts used `partial_cmp(..).unwrap()` and
+        // panicked on NaN (e.g. an untrained predictor head feeding the
+        // Fig. 13 evaluation). total_cmp sorts NaN after all finite
+        // values instead.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        let p = percentile(&xs, 0.25);
+        assert!(p.is_finite(), "lower quartile must dodge the NaN tail");
+        let pred = [f64::NAN, 5.0, 1.0, 2.0];
+        let actual = [4.0, 3.0, 2.0, 1.0];
+        let r = longtail_recall(&pred, &actual, 0.5);
+        assert!((0.0..=1.0).contains(&r));
+        let cdf = cdf_points(&xs, 4);
+        assert_eq!(cdf.len(), 4);
+        assert!(cdf[0].0.is_finite());
     }
 
     #[test]
