@@ -30,6 +30,14 @@
 //! | `migration_started`| traj, src, dst             | transmission sched|
 //! | `migrated`         | traj, src, dst             | migration planner |
 //! | `completed`        | traj, worker               | sim / serve loop  |
+//! | `tool_retry`       | traj, attempt              | fault recovery    |
+//! | `failed`           | traj, reason               | fault recovery    |
+//! | `worker_crashed`   | worker                     | fault plan        |
+//! | `displaced`        | traj, worker               | crash recovery    |
+//! | `migration_aborted`| traj, src, dst             | crash recovery    |
+//! | `degraded`         | on                         | scheduler         |
+//! | `kv_charge`        | traj, worker, bytes        | ring accounting   |
+//! | `kv_release`       | traj, worker, bytes        | ring accounting   |
 //!
 //! ## Invariants checked
 //!
@@ -44,12 +52,22 @@
 //!    slot capacity, and active counts never go negative.
 //! 4. **GPU budget** — the resource manager's allocation never sums to
 //!    more GPUs than the cluster budget.
-//! 5. **Completion conservation** — finished-trajectory count equals
-//!    submitted count, and nothing is left in-flight when the run drains
-//!    ([`Auditor::check_complete`]).
+//! 5. **Completion conservation** — every submitted trajectory either
+//!    completes or is *terminally failed with an audited reason*
+//!    (completed + failed == submitted), and nothing is left in-flight
+//!    when the run drains ([`Auditor::check_complete`]).
 //! 6. **Migration exclusivity** — at most one in-flight migration per
-//!    trajectory, never self-targeted, and every completion matches its
-//!    start.
+//!    trajectory, never self-targeted, and every completion (or abort)
+//!    matches its start.
+//! 7. **Crash fencing** — after a `worker_crashed` event, no enqueue,
+//!    admit, or migration endpoint may reference the dead worker, and
+//!    every displaced trajectory's residency is torn down explicitly.
+//! 8. **KV-ring accounting** — per-worker KV bytes derived from
+//!    `kv_charge`/`kv_release` never exceed declared ring capacity,
+//!    never go negative, never exceed a trajectory's own ring bound,
+//!    and drain to zero at end of run (charges are accounting events,
+//!    not decisions: they are excluded from [`Auditor::decision_trace`]
+//!    so fault-free traces stay comparable across audit granularities).
 //!
 //! The decision trace ([`Auditor::decision_trace`]) is a time-free,
 //! canonical rendering of the orchestration decisions; it powers the
@@ -86,6 +104,42 @@ pub enum AuditEvent {
     Migrated { traj: usize, src: usize, dst: usize },
     /// Trajectory finished its final segment.
     Completed { traj: usize, worker: usize },
+    /// A tool attempt failed or timed out; retry `attempt` (1-based)
+    /// was scheduled after backoff.
+    ToolRetry { traj: usize, attempt: usize },
+    /// Trajectory terminally failed: it leaves the system with an
+    /// audited reason instead of a completion (RL sample discarded).
+    Failed { traj: usize, reason: FailReason },
+    /// Worker crashed; no residency on it is legal from here on.
+    WorkerCrashed { worker: usize },
+    /// Trajectory residency/KV on a crashed worker was torn down.
+    Displaced { traj: usize, worker: usize },
+    /// In-flight KV transfer aborted (an endpoint crashed).
+    MigrationAborted { traj: usize, src: usize, dst: usize },
+    /// Degraded-mode admission toggled cluster-wide.
+    Degraded { on: bool },
+    /// KV bytes charged to a worker's ring (accounting, not a decision).
+    KvCharge { traj: usize, worker: usize, bytes: u64 },
+    /// KV bytes released from a worker's ring.
+    KvRelease { traj: usize, worker: usize, bytes: u64 },
+}
+
+/// Why a trajectory was terminally failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    /// Tool retry budget exhausted.
+    RetryBudget,
+    /// No surviving worker could host the trajectory.
+    WorkerLost,
+}
+
+impl FailReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailReason::RetryBudget => "retry_budget",
+            FailReason::WorkerLost => "worker_lost",
+        }
+    }
 }
 
 impl AuditEvent {
@@ -103,6 +157,14 @@ impl AuditEvent {
             AuditEvent::MigrationStarted { .. } => "migration_started",
             AuditEvent::Migrated { .. } => "migrated",
             AuditEvent::Completed { .. } => "completed",
+            AuditEvent::ToolRetry { .. } => "tool_retry",
+            AuditEvent::Failed { .. } => "failed",
+            AuditEvent::WorkerCrashed { .. } => "worker_crashed",
+            AuditEvent::Displaced { .. } => "displaced",
+            AuditEvent::MigrationAborted { .. } => "migration_aborted",
+            AuditEvent::Degraded { .. } => "degraded",
+            AuditEvent::KvCharge { .. } => "kv_charge",
+            AuditEvent::KvRelease { .. } => "kv_release",
         }
     }
 
@@ -118,10 +180,17 @@ impl AuditEvent {
             | AuditEvent::ToolDone { traj }
             | AuditEvent::MigrationStarted { traj, .. }
             | AuditEvent::Migrated { traj, .. }
-            | AuditEvent::Completed { traj, .. } => Some(traj),
-            AuditEvent::Resized { .. } | AuditEvent::Provisioned { .. } => {
-                None
-            }
+            | AuditEvent::Completed { traj, .. }
+            | AuditEvent::ToolRetry { traj, .. }
+            | AuditEvent::Failed { traj, .. }
+            | AuditEvent::Displaced { traj, .. }
+            | AuditEvent::MigrationAborted { traj, .. }
+            | AuditEvent::KvCharge { traj, .. }
+            | AuditEvent::KvRelease { traj, .. } => Some(traj),
+            AuditEvent::Resized { .. }
+            | AuditEvent::Provisioned { .. }
+            | AuditEvent::WorkerCrashed { .. }
+            | AuditEvent::Degraded { .. } => None,
         }
     }
 }
@@ -141,6 +210,7 @@ impl Record {
         o.insert("seq".into(), Json::Num(self.seq as f64));
         o.insert("t".into(), Json::Num(self.t));
         o.insert("event".into(), Json::Str(self.ev.name().into()));
+        let mut reason: Option<&'static str> = None;
         let mut put = |k: &str, v: usize| {
             o.insert(k.into(), Json::Num(v as f64));
         };
@@ -177,11 +247,35 @@ impl Record {
             }
             AuditEvent::ToolDone { traj } => put("traj", traj),
             AuditEvent::MigrationStarted { traj, src, dst }
-            | AuditEvent::Migrated { traj, src, dst } => {
+            | AuditEvent::Migrated { traj, src, dst }
+            | AuditEvent::MigrationAborted { traj, src, dst } => {
                 put("traj", traj);
                 put("src", src);
                 put("dst", dst);
             }
+            AuditEvent::ToolRetry { traj, attempt } => {
+                put("traj", traj);
+                put("attempt", attempt);
+            }
+            AuditEvent::Failed { traj, reason: r } => {
+                put("traj", traj);
+                reason = Some(r.name());
+            }
+            AuditEvent::WorkerCrashed { worker } => put("worker", worker),
+            AuditEvent::Displaced { traj, worker } => {
+                put("traj", traj);
+                put("worker", worker);
+            }
+            AuditEvent::Degraded { on } => put("on", on as usize),
+            AuditEvent::KvCharge { traj, worker, bytes }
+            | AuditEvent::KvRelease { traj, worker, bytes } => {
+                put("traj", traj);
+                put("worker", worker);
+                put("bytes", bytes as usize);
+            }
+        }
+        if let Some(r) = reason {
+            o.insert("reason".into(), Json::Str(r.into()));
         }
         Json::Obj(o)
     }
@@ -210,6 +304,9 @@ enum Lifecycle {
     Running { worker: usize },
     ToolParked,
     Done,
+    /// Terminally failed with an audited reason (counts toward
+    /// conservation alongside `Done`).
+    Failed,
 }
 
 #[derive(Debug)]
@@ -222,6 +319,9 @@ struct TrajAudit {
     /// worker or an explicit migration) before the next admit.
     preempted_pending: bool,
     inflight_migration: Option<(usize, usize)>,
+    /// KV bytes currently charged to some worker's ring on behalf of
+    /// this trajectory (invariant 8).
+    kv_bytes: u64,
 }
 
 impl TrajAudit {
@@ -232,6 +332,7 @@ impl TrajAudit {
             kv_worker: None,
             preempted_pending: false,
             inflight_migration: None,
+            kv_bytes: 0,
         }
     }
 }
@@ -246,6 +347,15 @@ pub struct Auditor {
     trajs: BTreeMap<usize, TrajAudit>,
     submitted: usize,
     completed: usize,
+    failed: usize,
+    /// Workers that have crashed (invariant 7 fencing).
+    crashed: std::collections::BTreeSet<usize>,
+    /// Per-worker KV bytes currently charged (invariant 8).
+    kv_used: Vec<u64>,
+    /// Per-worker KV ring capacity in bytes (empty = check disabled).
+    kv_limits: Vec<u64>,
+    /// Per-trajectory KV ring bound in bytes (empty = check disabled).
+    traj_kv_limits: Vec<u64>,
     seq: u64,
     events: Vec<Record>,
     violations: Vec<Violation>,
@@ -284,6 +394,31 @@ impl Auditor {
 
     pub fn completed(&self) -> usize {
         self.completed
+    }
+
+    /// Terminally failed trajectories (audited `failed` events).
+    pub fn failed(&self) -> usize {
+        self.failed
+    }
+
+    /// Declare KV ring capacities in bytes: per worker and per
+    /// trajectory (enables invariant 8 limit checks; accounting and
+    /// leak detection run regardless once charges are recorded).
+    pub fn set_kv_limits(
+        &mut self,
+        worker_limits: Vec<u64>,
+        traj_limits: Vec<u64>,
+    ) {
+        if self.kv_used.len() < worker_limits.len() {
+            self.kv_used.resize(worker_limits.len(), 0);
+        }
+        self.kv_limits = worker_limits;
+        self.traj_kv_limits = traj_limits;
+    }
+
+    /// KV bytes currently charged to `worker`'s ring.
+    pub fn kv_used(&self, worker: usize) -> u64 {
+        self.kv_used.get(worker).copied().unwrap_or(0)
     }
 
     fn violate(&mut self, t: f64, message: String) {
@@ -340,6 +475,14 @@ impl Auditor {
                         format!("traj {traj}: enqueued before submit"),
                     );
                 }
+                if self.crashed.contains(&worker) {
+                    self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: enqueued on crashed worker {worker}"
+                        ),
+                    );
+                }
                 match state {
                     Lifecycle::New | Lifecycle::ToolParked => {
                         self.traj_entry(traj).state =
@@ -355,6 +498,14 @@ impl Auditor {
                 }
             }
             AuditEvent::Admitted { traj, worker } => {
+                if self.crashed.contains(&worker) {
+                    self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: admitted on crashed worker {worker}"
+                        ),
+                    );
+                }
                 let state = self.traj_entry(traj).state;
                 match state {
                     Lifecycle::Queued { worker: qw } if qw == worker => {
@@ -477,6 +628,17 @@ impl Auditor {
                         format!("traj {traj}: self-migration {src}->{dst}"),
                     );
                 }
+                for w in [src, dst] {
+                    if self.crashed.contains(&w) {
+                        self.violate(
+                            t,
+                            format!(
+                                "traj {traj}: migration {src}->{dst} uses \
+                                 crashed worker {w}"
+                            ),
+                        );
+                    }
+                }
                 let prev = self.traj_entry(traj).inflight_migration;
                 if let Some((ps, pd)) = prev {
                     self.violate(
@@ -490,6 +652,15 @@ impl Auditor {
                 self.traj_entry(traj).inflight_migration = Some((src, dst));
             }
             AuditEvent::Migrated { traj, src, dst } => {
+                if self.crashed.contains(&dst) {
+                    self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: migration landed on crashed \
+                             worker {dst}"
+                        ),
+                    );
+                }
                 let inflight = self.traj_entry(traj).inflight_migration;
                 match inflight {
                     Some((ps, pd)) if ps == src && pd == dst => {}
@@ -523,6 +694,113 @@ impl Auditor {
                 self.completed += 1;
                 self.leave_worker(t, worker);
             }
+            AuditEvent::ToolRetry { traj, attempt } => {
+                let state = self.traj_entry(traj).state;
+                if state != Lifecycle::ToolParked {
+                    self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: tool retry {attempt} in illegal \
+                             state {state:?}"
+                        ),
+                    );
+                }
+            }
+            AuditEvent::Failed { traj, reason } => {
+                let state = self.traj_entry(traj).state;
+                match state {
+                    Lifecycle::Done | Lifecycle::Failed => self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: failed ({}) from terminal state \
+                             {state:?}",
+                            reason.name()
+                        ),
+                    ),
+                    Lifecycle::Running { worker } => {
+                        self.leave_worker(t, worker);
+                    }
+                    _ => {}
+                }
+                if let Some((src, dst)) =
+                    self.traj_entry(traj).inflight_migration
+                {
+                    self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: failed with migration \
+                             {src}->{dst} still in flight"
+                        ),
+                    );
+                }
+                let e = self.traj_entry(traj);
+                e.state = Lifecycle::Failed;
+                e.preempted_pending = false;
+                e.inflight_migration = None;
+                self.failed += 1;
+            }
+            AuditEvent::WorkerCrashed { worker } => {
+                if !self.crashed.insert(worker) {
+                    self.violate(
+                        t,
+                        format!("worker {worker}: double crash"),
+                    );
+                }
+            }
+            AuditEvent::Displaced { traj, worker } => {
+                if !self.crashed.contains(&worker) {
+                    self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: displaced from live worker \
+                             {worker}"
+                        ),
+                    );
+                }
+                let state = self.traj_entry(traj).state;
+                match state {
+                    Lifecycle::Running { worker: rw } if rw == worker => {
+                        self.traj_entry(traj).state = Lifecycle::New;
+                        self.leave_worker(t, worker);
+                    }
+                    Lifecycle::Queued { worker: qw } if qw == worker => {
+                        self.traj_entry(traj).state = Lifecycle::New;
+                    }
+                    // Tool-parked: only the KV prefix was resident.
+                    Lifecycle::ToolParked => {}
+                    other => self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: displaced from worker {worker} \
+                             in illegal state {other:?}"
+                        ),
+                    ),
+                }
+                let e = self.traj_entry(traj);
+                e.kv_worker = None;
+                e.preempted_pending = false;
+            }
+            AuditEvent::MigrationAborted { traj, src, dst } => {
+                let inflight = self.traj_entry(traj).inflight_migration;
+                match inflight {
+                    Some((ps, pd)) if ps == src && pd == dst => {}
+                    other => self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: migration {src}->{dst} aborted \
+                             but in-flight record is {other:?}"
+                        ),
+                    ),
+                }
+                self.traj_entry(traj).inflight_migration = None;
+            }
+            AuditEvent::Degraded { .. } => {}
+            AuditEvent::KvCharge { traj, worker, bytes } => {
+                self.kv_charge(t, traj, worker, bytes);
+            }
+            AuditEvent::KvRelease { traj, worker, bytes } => {
+                self.kv_release(t, traj, worker, bytes);
+            }
         }
     }
 
@@ -538,21 +816,115 @@ impl Auditor {
         }
     }
 
+    fn kv_charge(&mut self, t: f64, traj: usize, worker: usize, bytes: u64) {
+        if worker >= self.kv_used.len() {
+            self.kv_used.resize(worker + 1, 0);
+        }
+        self.kv_used[worker] += bytes;
+        let used = self.kv_used[worker];
+        if let Some(&cap) = self.kv_limits.get(worker) {
+            if cap > 0 && used > cap {
+                self.violate(
+                    t,
+                    format!(
+                        "worker {worker}: KV ring {used} bytes exceeds \
+                         capacity {cap}"
+                    ),
+                );
+            }
+        }
+        let (prev, total) = {
+            let e = self.traj_entry(traj);
+            let prev = e.kv_bytes;
+            e.kv_bytes += bytes;
+            (prev, e.kv_bytes)
+        };
+        // The data plane holds at most one resident copy per
+        // trajectory: a second charge without a release is a
+        // double-charge (the PR-6 ring-overflow bug class).
+        if prev > 0 {
+            self.violate(
+                t,
+                format!(
+                    "traj {traj}: KV double-charge ({prev} bytes \
+                     outstanding)"
+                ),
+            );
+        }
+        if let Some(&cap) = self.traj_kv_limits.get(traj) {
+            if cap > 0 && total > cap {
+                self.violate(
+                    t,
+                    format!(
+                        "traj {traj}: {total} KV bytes exceeds its ring \
+                         bound {cap}"
+                    ),
+                );
+            }
+        }
+    }
+
+    fn kv_release(
+        &mut self,
+        t: f64,
+        traj: usize,
+        worker: usize,
+        bytes: u64,
+    ) {
+        if worker >= self.kv_used.len() {
+            self.kv_used.resize(worker + 1, 0);
+        }
+        if self.kv_used[worker] < bytes {
+            let used = self.kv_used[worker];
+            self.violate(
+                t,
+                format!(
+                    "worker {worker}: KV release {bytes} bytes underflows \
+                     {used} charged"
+                ),
+            );
+            self.kv_used[worker] = 0;
+        } else {
+            self.kv_used[worker] -= bytes;
+        }
+        let e = self.traj_entry(traj);
+        if e.kv_bytes < bytes {
+            let have = e.kv_bytes;
+            e.kv_bytes = 0;
+            self.violate(
+                t,
+                format!(
+                    "traj {traj}: KV release {bytes} bytes underflows \
+                     {have} charged"
+                ),
+            );
+        } else {
+            e.kv_bytes -= bytes;
+        }
+    }
+
     /// Invariant 5: call when the run has drained. Verifies completion
     /// conservation and that nothing is stranded in-flight.
     pub fn check_complete(&mut self, t: f64) {
         self.seq += 1;
-        if self.completed != self.submitted {
-            let (c, s) = (self.completed, self.submitted);
+        if self.completed + self.failed != self.submitted {
+            let (c, f, s) = (self.completed, self.failed, self.submitted);
             self.violate(
                 t,
-                format!("completed {c} != submitted {s} (lost trajectory)"),
+                format!(
+                    "completed {c} + failed {f} != submitted {s} \
+                     (lost trajectory)"
+                ),
             );
         }
         let stranded: Vec<usize> = self
             .trajs
             .iter()
-            .filter(|(_, e)| e.submitted && e.state != Lifecycle::Done)
+            .filter(|(_, e)| {
+                e.submitted
+                    && e.state != Lifecycle::Done
+                    && e.state != Lifecycle::Failed
+            })
             .map(|(&id, _)| id)
             .collect();
         for id in stranded {
@@ -574,6 +946,19 @@ impl Auditor {
             self.violate(
                 t,
                 format!("worker {w}: {n} active trajectories at drain"),
+            );
+        }
+        let leaked: Vec<(usize, u64)> = self
+            .kv_used
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b > 0)
+            .map(|(w, &b)| (w, b))
+            .collect();
+        for (w, b) in leaked {
+            self.violate(
+                t,
+                format!("worker {w}: {b} KV bytes leaked at drain"),
             );
         }
     }
@@ -621,13 +1006,16 @@ impl Auditor {
 
     /// Canonical, time-free rendering of the orchestration decisions.
     /// Two runs that made the same decisions in the same order produce
-    /// identical traces regardless of wall-clock timing.
+    /// identical traces regardless of wall-clock timing. KV accounting
+    /// events are bookkeeping, not decisions, and are excluded — so a
+    /// run audited with ring accounting stays trace-comparable to one
+    /// audited without it.
     pub fn decision_trace(&self) -> Vec<String> {
         self.events
             .iter()
-            .map(|r| {
+            .filter_map(|r| {
                 let ev = &r.ev;
-                match *ev {
+                Some(match *ev {
                     AuditEvent::Submitted { traj } => {
                         format!("submit t{traj}")
                     }
@@ -664,7 +1052,27 @@ impl Auditor {
                     AuditEvent::Completed { traj, worker } => {
                         format!("complete t{traj} w{worker}")
                     }
-                }
+                    AuditEvent::ToolRetry { traj, attempt } => {
+                        format!("tool-retry t{traj} a{attempt}")
+                    }
+                    AuditEvent::Failed { traj, reason } => {
+                        format!("fail t{traj} {}", reason.name())
+                    }
+                    AuditEvent::WorkerCrashed { worker } => {
+                        format!("crash w{worker}")
+                    }
+                    AuditEvent::Displaced { traj, worker } => {
+                        format!("displace t{traj} w{worker}")
+                    }
+                    AuditEvent::MigrationAborted { traj, src, dst } => {
+                        format!("migrate-abort t{traj} {src}->{dst}")
+                    }
+                    AuditEvent::Degraded { on } => {
+                        format!("degraded {}", if on { "on" } else { "off" })
+                    }
+                    AuditEvent::KvCharge { .. }
+                    | AuditEvent::KvRelease { .. } => return None,
+                })
             })
             .collect()
     }
@@ -864,5 +1272,202 @@ mod tests {
         let d = diff_decisions(&a, &c);
         assert_eq!(d.len(), 1);
         assert!(d[0].contains("length"));
+    }
+
+    #[test]
+    fn terminal_failure_counts_toward_conservation() {
+        let mut a = Auditor::new();
+        a.set_worker_slots(vec![2]);
+        a.record(0.0, AuditEvent::Submitted { traj: 1 });
+        a.record(0.0, AuditEvent::Enqueued { traj: 1, worker: 0 });
+        a.record(0.1, AuditEvent::Admitted { traj: 1, worker: 0 });
+        a.record(0.5, AuditEvent::ToolWait { traj: 1, worker: 0, step: 0 });
+        a.record(1.0, AuditEvent::ToolRetry { traj: 1, attempt: 1 });
+        a.record(2.0, AuditEvent::ToolRetry { traj: 1, attempt: 2 });
+        a.record(
+            4.0,
+            AuditEvent::Failed { traj: 1, reason: FailReason::RetryBudget },
+        );
+        a.check_complete(5.0);
+        assert!(a.ok(), "{}", a.report_violations());
+        assert_eq!(a.failed(), 1);
+        assert_eq!(a.completed(), 0);
+    }
+
+    #[test]
+    fn tool_retry_outside_tool_park_flagged() {
+        let mut a = Auditor::new();
+        a.record(0.0, AuditEvent::Submitted { traj: 1 });
+        a.record(0.0, AuditEvent::Enqueued { traj: 1, worker: 0 });
+        a.record(0.1, AuditEvent::Admitted { traj: 1, worker: 0 });
+        a.record(0.2, AuditEvent::ToolRetry { traj: 1, attempt: 1 });
+        assert!(!a.ok());
+        assert!(a.report_violations().contains("tool retry"));
+    }
+
+    #[test]
+    fn double_failure_flagged() {
+        let mut a = Auditor::new();
+        a.record(0.0, AuditEvent::Submitted { traj: 1 });
+        a.record(
+            1.0,
+            AuditEvent::Failed { traj: 1, reason: FailReason::RetryBudget },
+        );
+        a.record(
+            2.0,
+            AuditEvent::Failed { traj: 1, reason: FailReason::WorkerLost },
+        );
+        assert!(!a.ok());
+        assert!(a.report_violations().contains("terminal state"));
+    }
+
+    #[test]
+    fn crash_displacement_recovery_is_clean() {
+        let mut a = Auditor::new();
+        a.set_worker_slots(vec![2, 2]);
+        a.record(0.0, AuditEvent::Submitted { traj: 1 });
+        a.record(0.0, AuditEvent::Enqueued { traj: 1, worker: 0 });
+        a.record(0.1, AuditEvent::Admitted { traj: 1, worker: 0 });
+        a.record(0.5, AuditEvent::WorkerCrashed { worker: 0 });
+        a.record(0.5, AuditEvent::Displaced { traj: 1, worker: 0 });
+        a.record(0.5, AuditEvent::Degraded { on: true });
+        a.record(0.5, AuditEvent::Enqueued { traj: 1, worker: 1 });
+        a.record(0.6, AuditEvent::Admitted { traj: 1, worker: 1 });
+        a.record(1.0, AuditEvent::Completed { traj: 1, worker: 1 });
+        a.check_complete(2.0);
+        assert!(a.ok(), "{}", a.report_violations());
+    }
+
+    #[test]
+    fn admit_on_crashed_worker_flagged() {
+        let mut a = Auditor::new();
+        a.record(0.0, AuditEvent::Submitted { traj: 1 });
+        a.record(0.5, AuditEvent::WorkerCrashed { worker: 0 });
+        a.record(0.6, AuditEvent::Enqueued { traj: 1, worker: 0 });
+        assert!(!a.ok());
+        assert!(a.report_violations().contains("crashed worker"));
+    }
+
+    #[test]
+    fn displacement_from_live_worker_flagged() {
+        let mut a = Auditor::new();
+        a.record(0.0, AuditEvent::Submitted { traj: 1 });
+        a.record(0.0, AuditEvent::Enqueued { traj: 1, worker: 0 });
+        a.record(0.1, AuditEvent::Admitted { traj: 1, worker: 0 });
+        a.record(0.2, AuditEvent::Displaced { traj: 1, worker: 0 });
+        assert!(!a.ok());
+        assert!(a.report_violations().contains("live worker"));
+    }
+
+    #[test]
+    fn migration_abort_clears_inflight_record() {
+        let mut a = Auditor::new();
+        a.record(
+            0.0,
+            AuditEvent::MigrationStarted { traj: 5, src: 0, dst: 1 },
+        );
+        a.record(
+            0.1,
+            AuditEvent::MigrationAborted { traj: 5, src: 0, dst: 1 },
+        );
+        // A fresh migration may now start.
+        a.record(
+            0.2,
+            AuditEvent::MigrationStarted { traj: 5, src: 0, dst: 2 },
+        );
+        a.record(0.3, AuditEvent::Migrated { traj: 5, src: 0, dst: 2 });
+        assert!(a.ok(), "{}", a.report_violations());
+    }
+
+    #[test]
+    fn kv_accounting_balances_and_leaks_detected() {
+        let mut a = Auditor::new();
+        a.set_kv_limits(vec![1000, 1000], vec![600]);
+        a.record(0.0, AuditEvent::Submitted { traj: 0 });
+        a.record(
+            0.1,
+            AuditEvent::KvCharge { traj: 0, worker: 0, bytes: 500 },
+        );
+        assert_eq!(a.kv_used(0), 500);
+        a.record(
+            0.2,
+            AuditEvent::KvRelease { traj: 0, worker: 0, bytes: 500 },
+        );
+        a.record(
+            0.3,
+            AuditEvent::KvCharge { traj: 0, worker: 1, bytes: 400 },
+        );
+        assert!(a.ok(), "{}", a.report_violations());
+        // 400 bytes still charged on worker 1 at drain → leak.
+        let mut b = Auditor::new();
+        b.record(
+            0.0,
+            AuditEvent::KvCharge { traj: 0, worker: 0, bytes: 64 },
+        );
+        b.check_complete(1.0);
+        assert!(b
+            .report_violations()
+            .contains("KV bytes leaked at drain"));
+    }
+
+    #[test]
+    fn kv_ring_overflow_and_underflow_flagged() {
+        let mut a = Auditor::new();
+        a.set_kv_limits(vec![100], vec![1000]);
+        a.record(
+            0.0,
+            AuditEvent::KvCharge { traj: 0, worker: 0, bytes: 101 },
+        );
+        assert!(a.report_violations().contains("exceeds capacity"));
+
+        let mut b = Auditor::new();
+        b.set_kv_limits(vec![1000], vec![50]);
+        b.record(
+            0.0,
+            AuditEvent::KvCharge { traj: 0, worker: 0, bytes: 60 },
+        );
+        assert!(b.report_violations().contains("ring bound"));
+
+        let mut c = Auditor::new();
+        c.record(
+            0.0,
+            AuditEvent::KvRelease { traj: 0, worker: 0, bytes: 10 },
+        );
+        assert!(c.report_violations().contains("underflows"));
+    }
+
+    #[test]
+    fn kv_double_charge_flagged() {
+        let mut a = Auditor::new();
+        a.record(
+            0.0,
+            AuditEvent::KvCharge { traj: 3, worker: 0, bytes: 10 },
+        );
+        a.record(
+            0.1,
+            AuditEvent::KvCharge { traj: 3, worker: 1, bytes: 10 },
+        );
+        assert!(!a.ok());
+        assert!(a.report_violations().contains("double-charge"));
+    }
+
+    #[test]
+    fn decision_trace_excludes_kv_accounting() {
+        let mut a = clean_single_lifecycle();
+        let mut b = clean_single_lifecycle();
+        b.record(
+            0.05,
+            AuditEvent::KvCharge { traj: 7, worker: 0, bytes: 128 },
+        );
+        b.record(
+            1.6,
+            AuditEvent::KvRelease { traj: 7, worker: 0, bytes: 128 },
+        );
+        assert!(
+            diff_decisions(&a, &b).is_empty(),
+            "accounting events must not perturb the decision trace"
+        );
+        a.record(9.0, AuditEvent::Degraded { on: true });
+        assert!(!diff_decisions(&a, &b).is_empty());
     }
 }

@@ -369,6 +369,9 @@ pub struct SimConfig {
     /// Re-run the resource manager every k rollout batches (§7.5:
     /// "executes only periodically").
     pub resource_period: usize,
+    /// Chaos harness: seeded fault injection + recovery policy. Inert
+    /// (no plan constructed, no extra RNG draws) unless `enabled`.
+    pub fault: crate::fault::FaultConfig,
 }
 
 impl Default for SimConfig {
@@ -379,6 +382,7 @@ impl Default for SimConfig {
             policy: PolicyConfig::heddle(),
             seed: 0,
             resource_period: 4,
+            fault: crate::fault::FaultConfig::default(),
         }
     }
 }
@@ -418,6 +422,53 @@ impl SimConfig {
                         .iter()
                         .map(|x| x.as_usize())
                         .collect::<Result<_, _>>()?;
+                }
+                "fault" => {
+                    for (fk, fv) in val.as_obj()? {
+                        let f = &mut cfg.fault;
+                        match fk.as_str() {
+                            "enabled" => f.enabled = fv.as_bool()?,
+                            "seed" => f.seed = fv.as_i64()? as u64,
+                            "tool_fail_prob" => {
+                                f.tool_fail_prob = fv.as_f64()?
+                            }
+                            "tool_hang_prob" => {
+                                f.tool_hang_prob = fv.as_f64()?
+                            }
+                            "tool_deadline" => {
+                                f.tool_deadline = fv.as_f64()?
+                            }
+                            "max_retries" => {
+                                f.retry.max_retries = fv.as_usize()? as u32
+                            }
+                            "base_backoff" => {
+                                f.retry.base_backoff = fv.as_f64()?
+                            }
+                            "backoff_cap" => {
+                                f.retry.backoff_cap = fv.as_f64()?
+                            }
+                            "worker_crash_prob" => {
+                                f.worker_crash_prob = fv.as_f64()?
+                            }
+                            "worker_mttf" => {
+                                f.worker_mttf = fv.as_f64()?
+                            }
+                            "straggler_prob" => {
+                                f.straggler_prob = fv.as_f64()?
+                            }
+                            "cold_spike_prob" => {
+                                f.cold_spike_prob = fv.as_f64()?
+                            }
+                            "cold_spike_factor" => {
+                                f.cold_spike_factor = fv.as_f64()?
+                            }
+                            other => {
+                                return Err(JsonError::Missing(format!(
+                                    "unknown fault config key: {other}"
+                                )))
+                            }
+                        }
+                    }
                 }
                 other => {
                     return Err(JsonError::Missing(format!(
@@ -498,6 +549,29 @@ mod tests {
     #[test]
     fn config_rejects_unknown_key() {
         let j = Json::parse(r#"{"modle":"qwen3-8b"}"#).unwrap();
+        assert!(SimConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn config_parses_fault_block() {
+        let j = Json::parse(
+            r#"{"fault":{"enabled":true,"seed":3,"tool_fail_prob":0.2,
+                "max_retries":6,"worker_crash_prob":0.5}}"#,
+        )
+        .unwrap();
+        let cfg = SimConfig::from_json(&j).unwrap();
+        assert!(cfg.fault.enabled);
+        assert_eq!(cfg.fault.seed, 3);
+        assert_eq!(cfg.fault.tool_fail_prob, 0.2);
+        assert_eq!(cfg.fault.retry.max_retries, 6);
+        assert_eq!(cfg.fault.worker_crash_prob, 0.5);
+        // Untouched knobs keep defaults.
+        assert_eq!(cfg.fault.retry.backoff_cap, 8.0);
+    }
+
+    #[test]
+    fn config_rejects_unknown_fault_key() {
+        let j = Json::parse(r#"{"fault":{"tool_fial_prob":0.2}}"#).unwrap();
         assert!(SimConfig::from_json(&j).is_err());
     }
 

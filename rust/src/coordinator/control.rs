@@ -245,6 +245,11 @@ impl ControlPlane {
             .iter()
             .find(|(id, _, _)| *id == traj_id)
             .map(|(_, _, w)| *w)?;
+        // Crash fencing: never plan a transfer whose endpoint is dead
+        // (the planner's rank map is oblivious to crashes).
+        if self.router.is_dead(target) || self.router.is_dead(current) {
+            return None;
+        }
         if target == current {
             self.last_migration_pred.insert(traj_id, predicted_len);
             return None;
@@ -275,6 +280,18 @@ impl ControlPlane {
             bytes: kv_tokens as f64 * self.cfg.model.kv_bytes_per_token,
             predicted_len,
         })
+    }
+
+    /// Crash recovery (fault harness): fence `worker` out of the whole
+    /// control plane — routing, cache residency, partition assignment,
+    /// and any pending (not yet launched) KV transfers touching it.
+    /// In-flight transfers are the data plane's to abort: it owns their
+    /// completion events.
+    pub fn on_worker_crash(&mut self, worker: usize) {
+        self.router.mark_dead(worker);
+        self.router.evict_worker_caches(worker);
+        self.router.reassign_from(worker);
+        self.transmissions.cancel_worker(worker);
     }
 
     /// Re-run the full placement DP on the remaining trajectories (used
@@ -383,6 +400,37 @@ mod tests {
         let p2 = cp.refresh_prediction(long, 2.min(long.n_steps()));
         assert!(p0.is_finite() && p2.is_finite());
         assert!(p2 >= 0.0);
+    }
+
+    #[test]
+    fn worker_crash_fences_control_plane() {
+        let (_, specs, mut cp) = setup(PolicyConfig::heddle());
+        if cp.n_workers() < 2 {
+            return;
+        }
+        let victim = cp
+            .router
+            .assigned_worker(specs[0].id)
+            .expect("placed trajectory has a worker");
+        cp.transmissions.submit(MigrationRequest {
+            traj_id: specs[0].id,
+            src_worker: victim,
+            dst_worker: (victim + 1) % cp.n_workers(),
+            bytes: 1e6,
+            predicted_len: 100.0,
+        });
+        cp.on_worker_crash(victim);
+        assert!(cp.router.is_dead(victim));
+        assert_eq!(cp.transmissions.pending_len(), 0);
+        for t in &specs {
+            assert_ne!(
+                cp.router.assigned_worker(t.id),
+                Some(victim),
+                "assignment must move off the crashed worker"
+            );
+        }
+        let (w, _) = cp.router.route_step(specs[0].id);
+        assert_ne!(w, victim);
     }
 
     #[test]

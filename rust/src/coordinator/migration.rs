@@ -113,6 +113,18 @@ impl TransmissionScheduler {
         self.pending.retain(|r| r.traj_id != traj_id);
     }
 
+    /// Crash recovery: drop every pending request that touches `worker`
+    /// (its KV source or destination no longer exists). Returns the
+    /// dropped requests so the caller can re-route the trajectories.
+    pub fn cancel_worker(&mut self, worker: usize) -> Vec<MigrationRequest> {
+        let (dropped, keep): (Vec<MigrationRequest>, Vec<MigrationRequest>) = self
+            .pending
+            .drain(..)
+            .partition(|r| r.src_worker == worker || r.dst_worker == worker);
+        self.pending = keep;
+        dropped
+    }
+
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }
@@ -235,6 +247,19 @@ mod tests {
         assert_eq!(ts.pending_len(), 1);
         let batch = ts.next_batch();
         assert_eq!(batch[0].dst_worker, 2);
+    }
+
+    #[test]
+    fn cancel_worker_drops_both_directions() {
+        let mut ts = TransmissionScheduler::new();
+        ts.submit(req(1, 0, 1, 100.0));
+        ts.submit(req(2, 2, 0, 100.0));
+        ts.submit(req(3, 2, 3, 100.0));
+        let dropped = ts.cancel_worker(0);
+        assert_eq!(dropped.len(), 2);
+        assert!(dropped.iter().all(|r| r.src_worker == 0 || r.dst_worker == 0));
+        assert_eq!(ts.pending_len(), 1);
+        assert_eq!(ts.next_batch()[0].traj_id, 3);
     }
 
     #[test]

@@ -21,6 +21,8 @@ pub struct Router {
     cache: HashMap<usize, (usize, usize)>,
     /// Heddle: the DP partition assignment (trajectory -> worker).
     assignment: HashMap<usize, usize>,
+    /// Crashed workers: never route to, never count as least-loaded.
+    dead: Vec<bool>,
     /// Load-skew threshold for LeastLoad / Hybrid (paper: e.g. 32).
     pub skew_threshold: f64,
     /// Dispatch statistics.
@@ -35,6 +37,7 @@ impl Router {
             loads: vec![0; n_workers],
             cache: HashMap::new(),
             assignment: HashMap::new(),
+            dead: vec![false; n_workers],
             skew_threshold: 32.0,
             dispatches: 0,
             cache_hits: 0,
@@ -69,6 +72,57 @@ impl Router {
         self.assignment.insert(traj_id, worker);
     }
 
+    /// Fence a crashed worker out of every routing decision.
+    pub fn mark_dead(&mut self, worker: usize) {
+        if worker >= self.dead.len() {
+            self.dead.resize(worker + 1, false);
+        }
+        self.dead[worker] = true;
+    }
+
+    pub fn is_dead(&self, worker: usize) -> bool {
+        self.dead.get(worker).copied().unwrap_or(false)
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.dead.iter().filter(|d| !**d).count()
+    }
+
+    /// Crash recovery: move every partition assignment off `worker` onto
+    /// the least-loaded surviving worker. Returns the re-assigned
+    /// trajectory ids (sorted — assignment iteration order is not
+    /// deterministic and recovery must be).
+    pub fn reassign_from(&mut self, worker: usize) -> Vec<usize> {
+        let mut ids: Vec<usize> = self
+            .assignment
+            .iter()
+            .filter(|(_, &w)| w == worker)
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        for &id in &ids {
+            let w = self.least_loaded();
+            self.assignment.insert(id, w);
+        }
+        ids
+    }
+
+    /// Crash recovery: drop every cache entry resident on `worker`.
+    /// Returns the affected trajectory ids (sorted).
+    pub fn evict_worker_caches(&mut self, worker: usize) -> Vec<usize> {
+        let mut ids: Vec<usize> = self
+            .cache
+            .iter()
+            .filter(|(_, &(w, _))| w == worker)
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        for id in &ids {
+            self.cache.remove(id);
+        }
+        ids
+    }
+
     /// Current load skew max/min (min clamped to 1).
     pub fn load_skew(&self) -> f64 {
         super::placement::load_skew(&self.loads)
@@ -78,16 +132,18 @@ impl Router {
         self.loads
             .iter()
             .enumerate()
+            .filter(|(w, _)| !self.is_dead(*w))
             .min_by_key(|(_, &l)| l)
             .map(|(i, _)| i)
-            .unwrap()
+            .expect("no surviving worker to route to")
     }
 
     /// Worker with the longest cached prefix for this trajectory (falls
-    /// back to least-loaded when nothing is cached).
+    /// back to least-loaded when nothing is cached or the cache owner
+    /// crashed).
     fn best_cache_worker(&self, traj_id: usize) -> (usize, bool) {
         match self.cache.get(&traj_id) {
-            Some(&(w, len)) if len > 0 => (w, true),
+            Some(&(w, len)) if len > 0 && !self.is_dead(w) => (w, true),
             _ => (self.least_loaded(), false),
         }
     }
@@ -98,11 +154,14 @@ impl Router {
         self.dispatches += 1;
         let (worker, hit) = match self.policy {
             PlacementKind::PresortedDp => {
-                // Heddle: strictly enforce the control-plane partition.
+                // Heddle: strictly enforce the control-plane partition
+                // (unless the assigned worker crashed and the crash
+                // handler has not re-assigned yet).
                 let w = self
                     .assignment
                     .get(&traj_id)
                     .copied()
+                    .filter(|&w| !self.is_dead(w))
                     .unwrap_or_else(|| self.least_loaded());
                 let hit = matches!(self.cache.get(&traj_id),
                                    Some(&(cw, l)) if cw == w && l > 0);
@@ -118,10 +177,20 @@ impl Router {
                 // worker, ignoring cache residency (the paper's
                 // "prohibitive recomputation" critique). Ties keep the
                 // cache worker when it is among the least loaded.
-                let min_load =
-                    self.loads.iter().copied().min().unwrap_or(0);
+                let min_load = self
+                    .loads
+                    .iter()
+                    .enumerate()
+                    .filter(|(w, _)| !self.is_dead(*w))
+                    .map(|(_, &l)| l)
+                    .min()
+                    .unwrap_or(0);
                 let w = match self.cache.get(&traj_id) {
-                    Some(&(cw, l)) if l > 0 && self.loads[cw] == min_load => {
+                    Some(&(cw, l))
+                        if l > 0
+                            && !self.is_dead(cw)
+                            && self.loads[cw] == min_load =>
+                    {
                         cw
                     }
                     _ => self.least_loaded(),
@@ -259,6 +328,46 @@ mod tests {
         r.on_leave(0);
         assert_eq!(r.loads(), &[1, 1]);
         assert_eq!(r.load_skew(), 1.0);
+    }
+
+    #[test]
+    fn dead_worker_fenced_out_of_routing() {
+        let mut r = Router::new(PlacementKind::PresortedDp, 3);
+        let p = Partition {
+            groups: vec![vec![0, 1], vec![2], vec![]],
+            makespan: 0.0,
+        };
+        r.set_assignment(&p);
+        r.set_cache(0, 0, 64);
+        r.mark_dead(0);
+        assert_eq!(r.n_alive(), 2);
+        // Assigned to the dead worker: falls back to a survivor.
+        let (w, hit) = r.route_step(0);
+        assert_ne!(w, 0);
+        assert!(!hit, "cache on the dead worker must not count");
+        // Recovery: reassignment moves everything off worker 0.
+        let moved = r.reassign_from(0);
+        assert_eq!(moved, vec![0, 1]);
+        for id in moved {
+            assert_ne!(r.assigned_worker(id), Some(0));
+        }
+        let evicted = r.evict_worker_caches(0);
+        assert_eq!(evicted, vec![0]);
+        assert_eq!(r.cache_of(0), None);
+    }
+
+    #[test]
+    fn least_load_skips_dead_workers() {
+        let mut r = Router::new(PlacementKind::LeastLoad, 2);
+        r.mark_dead(0); // worker 0 has load 0 but is dead
+        r.on_enter(1);
+        let (w, _) = r.route_step(9);
+        assert_eq!(w, 1);
+        // Cache on the dead worker never wins either.
+        r.set_cache(9, 0, 100);
+        let (w, hit) = r.route_step(9);
+        assert_eq!(w, 1);
+        assert!(!hit);
     }
 
     #[test]

@@ -245,6 +245,12 @@ pub enum ScheduleAction {
     Idle,
 }
 
+/// Fraction of a worker's slots kept admitting in degraded mode. After a
+/// worker crash the survivors absorb the displaced trajectories; shaving
+/// the admission ceiling leaves headroom for that influx instead of
+/// piling new admissions onto already-overcommitted batches.
+pub const DEGRADED_SLOT_FRACTION: f64 = 0.875;
+
 /// Algorithm 1's per-invocation decision for one worker: fill free slots
 /// first; otherwise preempt if the policy allows it.
 pub fn schedule_worker(
@@ -253,14 +259,34 @@ pub fn schedule_worker(
     max_slots: usize,
     preemption_enabled: bool,
 ) -> ScheduleAction {
+    schedule_worker_degraded(queue, active, max_slots, preemption_enabled, false)
+}
+
+/// [`schedule_worker`] with an explicit degraded-mode switch. Degraded
+/// mode (entered by the coordinator after a worker crash) (a) caps
+/// admission at [`DEGRADED_SLOT_FRACTION`] of the nominal slots (at
+/// least one) and (b) suspends preemption — slot swaps churn KV while
+/// the surviving workers are absorbing displaced trajectories.
+pub fn schedule_worker_degraded(
+    queue: &mut SchedulerQueue,
+    active: &ActiveSet,
+    max_slots: usize,
+    preemption_enabled: bool,
+    degraded: bool,
+) -> ScheduleAction {
+    let slots = if degraded {
+        ((max_slots as f64 * DEGRADED_SLOT_FRACTION) as usize).max(1)
+    } else {
+        max_slots
+    };
     if queue.is_empty() {
         return ScheduleAction::Idle;
     }
-    if active.len() < max_slots {
+    if active.len() < slots {
         let req = queue.pop().unwrap();
         return ScheduleAction::Admit(req);
     }
-    if preemption_enabled {
+    if preemption_enabled && !degraded {
         if let Some((victim, vprio)) = active.min_member() {
             if queue.should_preempt(vprio) {
                 let req = queue.pop().unwrap();
@@ -432,6 +458,48 @@ mod tests {
             schedule_worker(&mut q, &active, 2, false),
             ScheduleAction::Idle
         );
+    }
+
+    #[test]
+    fn degraded_mode_shaves_slots_and_suspends_preemption() {
+        // 8 nominal slots -> 7 degraded (floor of 8 * 0.875).
+        let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+        q.push(req(99, 1000.0, 50));
+        let mut active = ActiveSet::new();
+        for i in 0..7 {
+            active.insert(i, 10.0);
+        }
+        // Healthy: slot 8 is free, admit.
+        match schedule_worker_degraded(&mut q, &active, 8, true, false) {
+            ScheduleAction::Admit(r) => assert_eq!(r.traj_id, 99),
+            other => panic!("expected admit, got {other:?}"),
+        }
+        // Degraded: the 8th slot is withheld AND the (otherwise valid)
+        // preemption of a 10.0-priority victim is suspended.
+        q.push(req(99, 1000.0, 51));
+        assert_eq!(
+            schedule_worker_degraded(&mut q, &active, 8, true, true),
+            ScheduleAction::Idle
+        );
+        // Degraded still admits into genuinely free capacity.
+        active.remove(0);
+        active.remove(1);
+        match schedule_worker_degraded(&mut q, &active, 8, true, true) {
+            ScheduleAction::Admit(r) => assert_eq!(r.traj_id, 99),
+            other => panic!("expected degraded admit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn degraded_mode_keeps_at_least_one_slot() {
+        let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+        q.push(req(1, 100.0, 0));
+        let active = ActiveSet::new();
+        // 1 nominal slot * 0.875 truncates to 0; the floor keeps 1.
+        match schedule_worker_degraded(&mut q, &active, 1, true, true) {
+            ScheduleAction::Admit(r) => assert_eq!(r.traj_id, 1),
+            other => panic!("expected admit, got {other:?}"),
+        }
     }
 
     #[test]

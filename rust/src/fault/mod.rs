@@ -1,0 +1,467 @@
+//! Seeded fault injection (chaos harness) and recovery policy.
+//!
+//! A [`FaultPlan`] is a deterministic oracle for "what goes wrong when":
+//! tool-call failures and hangs, worker crashes, straggler slowdowns,
+//! and FaaS cold-start spikes. Every decision is drawn from a fresh
+//! RNG derived from `(seed, decision tag)`, so outcomes are a pure
+//! function of the fault seed and the decision's identity — *not* of
+//! the order in which the data plane happens to ask. That makes chaos
+//! runs replayable and lets the same-seed determinism gate
+//! (`audit::diff_decisions`) hold under faults too.
+//!
+//! Recovery knobs live in [`RetryPolicy`]: exponential backoff with
+//! bounded jitter and a hard retry budget. A trajectory that exhausts
+//! its budget is *terminally failed* — it leaves the system through an
+//! audited `Failed` event rather than silently stranding (the lifecycle
+//! auditor's conservation invariant becomes completed + failed ==
+//! submitted).
+//!
+//! The plan is strictly inert when `FaultConfig::enabled` is false: the
+//! data plane never constructs one, so fault-free runs draw zero extra
+//! random numbers and produce byte-identical decision traces.
+
+use crate::util::rng::Rng;
+
+/// Salt mixed into per-decision RNG derivation, one per decision kind,
+/// so e.g. the backoff jitter for (traj, step, attempt) is independent
+/// of the outcome draw for the same triple.
+const SALT_TOOL: u64 = 0x7001_c0de;
+const SALT_BACKOFF: u64 = 0xbac0_0ff5;
+const SALT_COLD: u64 = 0xc01d_57a7;
+const SALT_WORKER: u64 = 0x3027_bad5;
+
+/// Outcome of one tool-call attempt under the fault plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ToolOutcome {
+    /// The call executes normally.
+    Ok,
+    /// The backend runs the call but returns an error at completion.
+    Fail,
+    /// The backend goes silent; only the caller's deadline ends the wait.
+    Hang,
+}
+
+/// Exponential-backoff retry policy for failed/hung tool calls.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Retries allowed after the initial attempt; exceeding the budget
+    /// terminally fails the trajectory.
+    pub max_retries: u32,
+    /// Backoff before the first retry (seconds).
+    pub base_backoff: f64,
+    /// Ceiling on the nominal (pre-jitter) backoff (seconds).
+    pub backoff_cap: f64,
+    /// Jitter fraction in [0, 1): the delay is drawn uniformly from
+    /// `[nominal * (1 - jitter), nominal)`.
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 4,
+            base_backoff: 0.5,
+            backoff_cap: 8.0,
+            jitter: 0.5,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Nominal (pre-jitter) backoff before retry `attempt` (1-based).
+    pub fn nominal_backoff(&self, attempt: u32) -> f64 {
+        let doublings = attempt.saturating_sub(1).min(62);
+        (self.base_backoff * (1u64 << doublings) as f64)
+            .min(self.backoff_cap)
+    }
+
+    /// Jittered backoff given a uniform draw `u` in [0, 1).
+    pub fn backoff(&self, attempt: u32, u: f64) -> f64 {
+        let nominal = self.nominal_backoff(attempt);
+        nominal * (1.0 - self.jitter + self.jitter * u)
+    }
+}
+
+/// Fault-injection configuration. All probabilities are per decision
+/// (per tool attempt, per worker). Defaults are a moderate chaos mix;
+/// `enabled` defaults to false so existing configs are untouched.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    pub enabled: bool,
+    /// Fault seed — independent of the workload/policy seed so the same
+    /// rollout can be replayed under different fault plans.
+    pub seed: u64,
+    /// Probability a tool attempt completes with an error.
+    pub tool_fail_prob: f64,
+    /// Probability a tool attempt hangs (never returns).
+    pub tool_hang_prob: f64,
+    /// Deadline after which a hung tool attempt is abandoned (seconds).
+    pub tool_deadline: f64,
+    pub retry: RetryPolicy,
+    /// Probability a given worker crashes at some point during the run.
+    pub worker_crash_prob: f64,
+    /// Mean time-to-failure for a crashing worker (seconds,
+    /// exponentially distributed).
+    pub worker_mttf: f64,
+    /// Probability a given worker is a straggler for the whole run.
+    pub straggler_prob: f64,
+    /// Decode-slowdown factor range for stragglers (uniform).
+    pub straggler_slowdown: (f64, f64),
+    /// Probability a cold FaaS container start pays a spike multiplier.
+    pub cold_spike_prob: f64,
+    /// Cold-start latency multiplier when a spike fires.
+    pub cold_spike_factor: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            enabled: false,
+            seed: 1,
+            tool_fail_prob: 0.05,
+            tool_hang_prob: 0.02,
+            tool_deadline: 30.0,
+            retry: RetryPolicy::default(),
+            worker_crash_prob: 0.25,
+            worker_mttf: 120.0,
+            straggler_prob: 0.15,
+            straggler_slowdown: (2.0, 4.0),
+            cold_spike_prob: 0.3,
+            cold_spike_factor: 8.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// A plan that injects nothing (useful as a recovery-machinery
+    /// smoke test: all the retry/deadline paths stay armed but never
+    /// fire).
+    pub fn quiescent(seed: u64) -> Self {
+        FaultConfig {
+            enabled: true,
+            seed,
+            tool_fail_prob: 0.0,
+            tool_hang_prob: 0.0,
+            worker_crash_prob: 0.0,
+            straggler_prob: 0.0,
+            cold_spike_prob: 0.0,
+            ..FaultConfig::default()
+        }
+    }
+}
+
+/// Counters for injected faults and recovery actions. `injected()` is
+/// the headline "chaos actually happened" number CI asserts on.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub tool_failures: usize,
+    pub tool_hangs: usize,
+    pub worker_crashes: usize,
+    pub stragglers: usize,
+    pub cold_spikes: usize,
+    /// Tool retries actually scheduled (after backoff).
+    pub retries: usize,
+    /// Trajectories that exhausted their retry budget.
+    pub retry_exhausted: usize,
+    /// Trajectories displaced off a crashed worker.
+    pub displaced: usize,
+    /// Trajectories that hit a failure-class fault and still completed.
+    pub recovered: usize,
+    /// Trajectories terminally failed (audited `Failed` events).
+    pub failed: usize,
+}
+
+impl FaultStats {
+    /// Total injected faults of all classes.
+    pub fn injected(&self) -> usize {
+        self.tool_failures
+            + self.tool_hangs
+            + self.worker_crashes
+            + self.stragglers
+            + self.cold_spikes
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "faults: injected={} (tool_fail={} tool_hang={} crash={} \
+             straggler={} cold_spike={}) retries={} displaced={} \
+             recovered={} failed={}",
+            self.injected(),
+            self.tool_failures,
+            self.tool_hangs,
+            self.worker_crashes,
+            self.stragglers,
+            self.cold_spikes,
+            self.retries,
+            self.displaced,
+            self.recovered,
+            self.failed,
+        )
+    }
+}
+
+/// Deterministic fault oracle for one run. Per-worker faults (crash
+/// times, straggler slowdowns) are drawn at construction; per-attempt
+/// tool faults are drawn on demand from decision-tagged RNGs.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    /// Per-worker decode slowdown factor (1.0 = healthy).
+    slowdowns: Vec<f64>,
+    /// Per-worker crash time (`f64::INFINITY` = never crashes).
+    crash_times: Vec<f64>,
+    stats: FaultStats,
+}
+
+/// Unique tag for one tool-call decision. Steps and attempts are small
+/// (bounded by the retry budget), so the packing is collision-free.
+fn tool_tag(traj: usize, step: usize, attempt: u32) -> u64 {
+    ((traj as u64) << 20) | ((step as u64 & 0x3fff) << 6) | attempt as u64
+}
+
+impl FaultPlan {
+    pub fn new(cfg: &FaultConfig, n_workers: usize) -> Self {
+        let mut stats = FaultStats::default();
+        let mut slowdowns = Vec::with_capacity(n_workers);
+        let mut crash_times = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let mut rng = Rng::new(
+                cfg.seed
+                    ^ SALT_WORKER
+                    ^ (w as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            );
+            let crash = if rng.bool(cfg.worker_crash_prob) {
+                rng.exponential(cfg.worker_mttf)
+            } else {
+                f64::INFINITY
+            };
+            let slow = if rng.bool(cfg.straggler_prob) {
+                let (lo, hi) = cfg.straggler_slowdown;
+                stats.stragglers += 1;
+                lo + (hi - lo) * rng.f64()
+            } else {
+                1.0
+            };
+            crash_times.push(crash);
+            slowdowns.push(slow);
+        }
+        FaultPlan { cfg: *cfg, slowdowns, crash_times, stats }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &FaultStats {
+        &self.stats
+    }
+
+    pub fn stats_mut(&mut self) -> &mut FaultStats {
+        &mut self.stats
+    }
+
+    /// Decode slowdown factor for `worker` (1.0 = healthy).
+    pub fn slowdown(&self, worker: usize) -> f64 {
+        self.slowdowns.get(worker).copied().unwrap_or(1.0)
+    }
+
+    /// Scheduled crash time for `worker` (infinite = never).
+    pub fn crash_time(&self, worker: usize) -> f64 {
+        self.crash_times.get(worker).copied().unwrap_or(f64::INFINITY)
+    }
+
+    fn decision_rng(&self, salt: u64, tag: u64) -> Rng {
+        Rng::new(
+            self.cfg
+                .seed
+                .wrapping_add(salt.wrapping_mul(0xd134_2543_de82_ef95))
+                ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        )
+    }
+
+    /// Outcome of tool attempt `attempt` (0 = initial) for step `step`
+    /// of trajectory `traj`. Order-independent: the draw depends only
+    /// on the identifiers, never on call order. Injections are counted
+    /// in [`FaultStats`].
+    pub fn tool_outcome(
+        &mut self,
+        traj: usize,
+        step: usize,
+        attempt: u32,
+    ) -> ToolOutcome {
+        let mut rng =
+            self.decision_rng(SALT_TOOL, tool_tag(traj, step, attempt));
+        let u = rng.f64();
+        if u < self.cfg.tool_fail_prob {
+            self.stats.tool_failures += 1;
+            ToolOutcome::Fail
+        } else if u < self.cfg.tool_fail_prob + self.cfg.tool_hang_prob {
+            self.stats.tool_hangs += 1;
+            ToolOutcome::Hang
+        } else {
+            ToolOutcome::Ok
+        }
+    }
+
+    /// Jittered backoff (seconds) before retry `attempt` (1-based) of
+    /// step `step` for trajectory `traj`.
+    pub fn backoff(&self, traj: usize, step: usize, attempt: u32) -> f64 {
+        let mut rng = self
+            .decision_rng(SALT_BACKOFF, tool_tag(traj, step, attempt));
+        self.cfg.retry.backoff(attempt, rng.f64())
+    }
+
+    /// Cold-start latency multiplier for this tool attempt (applies only
+    /// if the FaaS pool actually cold-starts the call).
+    pub fn cold_multiplier(
+        &self,
+        traj: usize,
+        step: usize,
+        attempt: u32,
+    ) -> f64 {
+        let mut rng =
+            self.decision_rng(SALT_COLD, tool_tag(traj, step, attempt));
+        if rng.bool(self.cfg.cold_spike_prob) {
+            self.cfg.cold_spike_factor
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_nominal_doubles_then_caps() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.nominal_backoff(1), 0.5);
+        assert_eq!(p.nominal_backoff(2), 1.0);
+        assert_eq!(p.nominal_backoff(3), 2.0);
+        assert_eq!(p.nominal_backoff(4), 4.0);
+        assert_eq!(p.nominal_backoff(5), 8.0);
+        assert_eq!(p.nominal_backoff(6), 8.0, "capped");
+        assert_eq!(p.nominal_backoff(60), 8.0, "no overflow at depth");
+    }
+
+    #[test]
+    fn backoff_jitter_stays_in_band_and_is_monotone() {
+        let cfg = FaultConfig { enabled: true, ..FaultConfig::default() };
+        let plan = FaultPlan::new(&cfg, 4);
+        let retry = cfg.retry;
+        for traj in 0..10 {
+            let mut prev = 0.0;
+            for attempt in 1..=6u32 {
+                let b = plan.backoff(traj, 0, attempt);
+                let nominal = retry.nominal_backoff(attempt);
+                assert!(
+                    b >= nominal * (1.0 - retry.jitter) - 1e-12
+                        && b <= nominal,
+                    "backoff {b} outside jitter band of nominal {nominal}"
+                );
+                // With jitter 0.5 and doubling nominals, successive
+                // delays never shrink until the cap.
+                if attempt <= 5 {
+                    assert!(b >= prev, "backoff shrank: {b} < {prev}");
+                }
+                prev = b;
+            }
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_order_independent() {
+        let cfg = FaultConfig {
+            enabled: true,
+            tool_fail_prob: 0.3,
+            tool_hang_prob: 0.2,
+            ..FaultConfig::default()
+        };
+        let mut a = FaultPlan::new(&cfg, 8);
+        let mut b = FaultPlan::new(&cfg, 8);
+        let mut triples = Vec::new();
+        for traj in 0..20 {
+            for step in 0..5 {
+                for attempt in 0..3u32 {
+                    triples.push((traj, step, attempt));
+                }
+            }
+        }
+        let fwd: Vec<ToolOutcome> = triples
+            .iter()
+            .map(|&(t, s, at)| a.tool_outcome(t, s, at))
+            .collect();
+        let rev: Vec<ToolOutcome> = triples
+            .iter()
+            .rev()
+            .map(|&(t, s, at)| b.tool_outcome(t, s, at))
+            .collect();
+        let rev_fwd: Vec<ToolOutcome> =
+            rev.into_iter().rev().collect();
+        assert_eq!(fwd, rev_fwd, "outcomes depend on query order");
+        assert_eq!(a.stats().injected(), b.stats().injected());
+        for w in 0..8 {
+            assert_eq!(a.crash_time(w), b.crash_time(w));
+            assert_eq!(a.slowdown(w), b.slowdown(w));
+        }
+    }
+
+    #[test]
+    fn quiescent_plan_injects_nothing() {
+        let cfg = FaultConfig::quiescent(7);
+        let mut plan = FaultPlan::new(&cfg, 16);
+        for w in 0..16 {
+            assert_eq!(plan.crash_time(w), f64::INFINITY);
+            assert_eq!(plan.slowdown(w), 1.0);
+        }
+        for traj in 0..50 {
+            for attempt in 0..3u32 {
+                assert_eq!(
+                    plan.tool_outcome(traj, 0, attempt),
+                    ToolOutcome::Ok
+                );
+                assert_eq!(plan.cold_multiplier(traj, 0, attempt), 1.0);
+            }
+        }
+        assert_eq!(plan.stats().injected(), 0);
+    }
+
+    #[test]
+    fn certain_faults_fire_within_bounds() {
+        let cfg = FaultConfig {
+            enabled: true,
+            worker_crash_prob: 1.0,
+            straggler_prob: 1.0,
+            straggler_slowdown: (2.0, 4.0),
+            ..FaultConfig::default()
+        };
+        let plan = FaultPlan::new(&cfg, 12);
+        for w in 0..12 {
+            let ct = plan.crash_time(w);
+            assert!(ct.is_finite() && ct >= 0.0);
+            let s = plan.slowdown(w);
+            assert!((2.0..=4.0).contains(&s), "slowdown {s} out of range");
+        }
+        assert_eq!(plan.stats().stragglers, 12);
+    }
+
+    #[test]
+    fn tool_outcome_frequencies_track_probabilities() {
+        let cfg = FaultConfig {
+            enabled: true,
+            tool_fail_prob: 0.3,
+            tool_hang_prob: 0.2,
+            ..FaultConfig::default()
+        };
+        let mut plan = FaultPlan::new(&cfg, 1);
+        let n = 4000usize;
+        for traj in 0..n {
+            plan.tool_outcome(traj, 0, 0);
+        }
+        let fail = plan.stats().tool_failures as f64 / n as f64;
+        let hang = plan.stats().tool_hangs as f64 / n as f64;
+        assert!((fail - 0.3).abs() < 0.04, "fail rate {fail}");
+        assert!((hang - 0.2).abs() < 0.04, "hang rate {hang}");
+    }
+}

@@ -17,6 +17,7 @@
 pub mod audit;
 pub mod config;
 pub mod coordinator;
+pub mod fault;
 pub mod figures;
 pub mod metrics;
 pub mod model;

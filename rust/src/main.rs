@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
             let policy =
                 PolicyConfig::by_name(args.get_or("policy", "heddle"), 1)
                     .ok_or_else(|| anyhow::anyhow!("unknown policy"))?;
-            let cfg = heddle::serve::ServeConfig {
+            let mut cfg = heddle::serve::ServeConfig {
                 n_workers: args.get_usize("workers", 4),
                 max_batch: args.get_usize("batch", 8),
                 policy,
@@ -62,6 +62,11 @@ fn main() -> anyhow::Result<()> {
                 audit: args.flag("audit"),
                 ..Default::default()
             };
+            if args.flag("faults") {
+                cfg.fault.enabled = true;
+                cfg.fault.seed =
+                    args.get_u64("fault-seed", cfg.fault.seed);
+            }
             let domain = Domain::parse(args.get_or("domain", "coding"))
                 .ok_or_else(|| anyhow::anyhow!("bad domain"))?;
             let mut wl = WorkloadConfig::new(
@@ -81,6 +86,9 @@ fn main() -> anyhow::Result<()> {
                 out.tokens_generated,
                 out.throughput()
             );
+            if cfg.fault.enabled {
+                println!("{}", out.faults.summary());
+            }
             if args.flag("audit") {
                 if let Some(a) = &out.audit {
                     write_audit(&args, a)?;
@@ -102,20 +110,67 @@ fn main() -> anyhow::Result<()> {
             cfg.model = model;
             cfg.policy = policy;
             cfg.seed = params.seed;
+            if args.flag("faults") {
+                cfg.fault.enabled = true;
+                cfg.fault.seed =
+                    args.get_u64("fault-seed", cfg.fault.seed);
+            }
             let specs = generate(&WorkloadConfig::new(
                 domain,
                 params.prompts,
                 params.seed,
             ));
             let history = history_workload(domain, params.seed);
-            if args.flag("audit") {
+            let label = args.get_or("policy", "heddle").to_string();
+            if args.flag("determinism-check") {
+                // Differential gate: two same-seed runs (fault plan
+                // included) must make byte-identical decisions.
+                let (r, a, stats) =
+                    heddle::sim::simulate_chaos(&cfg, &history, &specs);
+                let (_, b, _) =
+                    heddle::sim::simulate_chaos(&cfg, &history, &specs);
+                println!("{}", r.summary(&label));
+                if cfg.fault.enabled {
+                    println!("{}", stats.summary());
+                }
+                if args.flag("audit") {
+                    write_audit(&args, &a)?;
+                }
+                let diff = heddle::audit::diff_decisions(&a, &b);
+                anyhow::ensure!(
+                    diff.is_empty(),
+                    "determinism check failed: {} divergent decisions \
+                     (first: {:?})",
+                    diff.len(),
+                    diff.first()
+                );
+                println!(
+                    "determinism check: {} decisions identical across \
+                     same-seed runs",
+                    a.decision_trace().len()
+                );
+                anyhow::ensure!(a.ok(), "{}", a.report_violations());
+            } else if cfg.fault.enabled {
+                let (r, audit, stats) =
+                    heddle::sim::simulate_chaos(&cfg, &history, &specs);
+                println!("{}", r.summary(&label));
+                println!("{}", stats.summary());
+                if args.flag("audit") {
+                    write_audit(&args, &audit)?;
+                }
+                anyhow::ensure!(
+                    audit.ok(),
+                    "fault-injection run violated lifecycle invariants:\n{}",
+                    audit.report_violations()
+                );
+            } else if args.flag("audit") {
                 let (r, audit) =
                     heddle::sim::simulate_audited(&cfg, &history, &specs);
-                println!("{}", r.summary(args.get_or("policy", "heddle")));
+                println!("{}", r.summary(&label));
                 write_audit(&args, &audit)?;
             } else {
                 let r = simulate(&cfg, &history, &specs);
-                println!("{}", r.summary(args.get_or("policy", "heddle")));
+                println!("{}", r.summary(&label));
             }
         }
         "train" => {
@@ -253,7 +308,8 @@ fn main() -> anyhow::Result<()> {
                  bench-table1|bench-table2|bench-ablation>\n\
                  flags: --gpus N --prompts N --seed N --model qwen3-14b \
                  --policy heddle|verl|verl*|slime --domain coding|search|math \
-                 --audit-out FILE --audit"
+                 --audit-out FILE --fault-seed N --audit --faults \
+                 --determinism-check"
             );
         }
     }

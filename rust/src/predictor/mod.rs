@@ -96,6 +96,15 @@ pub fn features(obs: &Observation, prompt_only: bool) -> [f64; N_FEATURES] {
     f[13] = if k >= 1 { spec.difficulty } else { 0.5 };
     f[14] = last_lat.ln_1p();
     f[15] = 0.0;
+    // Upstream non-finite guard: runtime telemetry (group means, spec
+    // fields) can surface NaN/inf, and one poisoned feature would ride
+    // into every downstream priority and comparator. Zero is the
+    // "feature absent" value used elsewhere in the layout.
+    for v in f.iter_mut() {
+        if !v.is_finite() {
+            *v = 0.0;
+        }
+    }
     f
 }
 
@@ -126,8 +135,13 @@ impl RidgeModel {
         }
     }
 
-    /// Accumulate one (features, log1p(remaining)) sample.
+    /// Accumulate one (features, log1p(remaining)) sample. Non-finite
+    /// samples are dropped: a single NaN would poison the normal
+    /// equations permanently (every later fit inherits it).
     pub fn observe(&mut self, x: &[f64; N_FEATURES], y_log1p: f64) {
+        if !y_log1p.is_finite() || x.iter().any(|v| !v.is_finite()) {
+            return;
+        }
         let mut xb = [0.0; D];
         xb[..N_FEATURES].copy_from_slice(x);
         xb[N_FEATURES] = 1.0;
@@ -204,9 +218,16 @@ impl RidgeModel {
         y
     }
 
-    /// Predicted remaining tokens (>= 0).
+    /// Predicted remaining tokens (>= 0, always finite: an overflowed
+    /// `exp` or degenerate fit falls back to 0 rather than exporting
+    /// inf/NaN into scheduler priorities).
     pub fn predict(&mut self, x: &[f64; N_FEATURES]) -> f64 {
-        (self.predict_log1p(x).exp() - 1.0).max(0.0)
+        let y = (self.predict_log1p(x).exp() - 1.0).max(0.0);
+        if y.is_finite() {
+            y
+        } else {
+            0.0
+        }
     }
 }
 
@@ -589,6 +610,34 @@ mod tests {
         assert!(f2[2] > 0.0);
         assert!((f2[1] - 0.2).abs() < 1e-12);
         assert_eq!(f2[13], spec.difficulty);
+    }
+
+    #[test]
+    fn non_finite_telemetry_is_guarded() {
+        let w = workload(10);
+        let spec = &w[0];
+        // Poisoned group-mean telemetry must not leak into features.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut obs = Observation::new(spec, 2);
+            obs.group_mean_tokens = bad;
+            let f = features(&obs, false);
+            assert!(f.iter().all(|v| v.is_finite()), "{bad}: {f:?}");
+        }
+        // A non-finite sample is dropped, not folded into the normal
+        // equations.
+        let mut m = RidgeModel::new(1e-3);
+        let mut bad_x = [0.0; N_FEATURES];
+        bad_x[0] = f64::NAN;
+        m.observe(&bad_x, 1.0);
+        m.observe(&[0.5; N_FEATURES], f64::INFINITY);
+        assert_eq!(m.n_obs(), 0);
+        // Predictions stay finite even when exp() overflows.
+        let mut t = RidgeModel::new(1e-6);
+        let mut x = [0.0; N_FEATURES];
+        x[0] = 1.0;
+        t.observe(&x, 800.0); // exp(~800) overflows f64
+        let p = t.predict(&x);
+        assert!(p.is_finite() && p >= 0.0, "p={p}");
     }
 
     #[test]

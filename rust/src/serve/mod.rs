@@ -16,12 +16,13 @@
 //! resources — the heterogeneous-MP claims are validated by the
 //! simulator (DESIGN.md §1).
 
-use crate::audit::{AuditEvent, Auditor};
+use crate::audit::{AuditEvent, Auditor, FailReason};
 use crate::config::{PolicyConfig, ResourceKind, SimConfig};
 use crate::coordinator::control::ControlPlane;
 use crate::coordinator::scheduler::{
     schedule_worker, ActiveSet, ScheduleAction, SchedulerQueue, StepRequest,
 };
+use crate::fault::{FaultConfig, FaultPlan, FaultStats, ToolOutcome};
 use crate::metrics::{RolloutReport, TrajectoryMetrics};
 use crate::model::{sample_top_p, synth_token};
 use crate::runtime::{Engine, TrajKv};
@@ -46,6 +47,11 @@ pub struct ServeConfig {
     /// Attach the lifecycle-invariant auditor (always on in debug
     /// builds) and return it in the outcome.
     pub audit: bool,
+    /// Fault injection (off by default). The serving path injects tool
+    /// failures and hangs with backoff retries and a retry budget;
+    /// worker crashes, stragglers, and cold-start spikes are simulator
+    /// concerns (see ROADMAP "Fault model & recovery semantics").
+    pub fault: FaultConfig,
 }
 
 impl Default for ServeConfig {
@@ -60,6 +66,7 @@ impl Default for ServeConfig {
             top_p: 0.9,
             seed: 0,
             audit: false,
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -112,6 +119,9 @@ enum Phase {
     Running,
     ToolWait,
     Done,
+    /// Terminal failure (retry budget exhausted under fault injection);
+    /// counts toward completion for the drain loop and conservation.
+    Failed,
 }
 
 struct ServeTraj {
@@ -124,6 +134,12 @@ struct ServeTraj {
     /// Tokens of `log` that still need prefilling before decoding.
     prefilled: usize,
     tool_deadline: f64,
+    /// Drawn outcome of the in-flight tool attempt (fault injection).
+    tool_outcome: ToolOutcome,
+    /// Retry attempts consumed for the current tool call.
+    tool_attempts: u32,
+    /// Whether any fault touched this trajectory (recovery accounting).
+    faulted: bool,
     enqueued_at: f64,
     predicted: f64,
     metrics: TrajectoryMetrics,
@@ -146,6 +162,9 @@ pub struct ServeOutcome {
     pub mean_migration_us: f64,
     /// Lifecycle auditor, present when auditing was enabled.
     pub audit: Option<Auditor>,
+    /// Fault-injection and recovery counters (zeroed when faults are
+    /// disabled).
+    pub faults: FaultStats,
 }
 
 impl ServeOutcome {
@@ -181,6 +200,10 @@ pub fn serve_rollout(
     sim_cfg.seed = cfg.seed;
     let mut control = ControlPlane::new(&sim_cfg, history, &specs);
     let n_workers = control.n_workers();
+    let mut faults: Option<FaultPlan> = cfg
+        .fault
+        .enabled
+        .then(|| FaultPlan::new(&cfg.fault, n_workers));
 
     let mut workers: Vec<ServeWorker> = (0..n_workers)
         .map(|_| ServeWorker {
@@ -202,6 +225,9 @@ pub fn serve_rollout(
                 log,
                 prefilled: 0,
                 tool_deadline: 0.0,
+                tool_outcome: ToolOutcome::Ok,
+                tool_attempts: 0,
+                faulted: false,
                 enqueued_at: 0.0,
                 predicted: 0.0,
                 metrics: TrajectoryMetrics { id: s.id, ..Default::default() },
@@ -265,14 +291,72 @@ pub fn serve_rollout(
         );
         let t_now = now();
 
-        // 1. Tool completions.
+        // 1. Tool completions (and fault-injected failures/retries).
         for i in 0..trajs.len() {
             if trajs[i].phase == Phase::ToolWait
                 && t_now >= trajs[i].tool_deadline
             {
+                let prev = trajs[i].step - 1;
+                if trajs[i].tool_outcome != ToolOutcome::Ok {
+                    // The attempt failed (or hung to its deadline):
+                    // retry with jittered backoff until the budget is
+                    // exhausted, then fail the trajectory terminally.
+                    let plan = faults
+                        .as_mut()
+                        .expect("fault outcome without a fault plan");
+                    let attempt = trajs[i].tool_attempts + 1;
+                    trajs[i].tool_attempts = attempt;
+                    trajs[i].faulted = true;
+                    if attempt > cfg.fault.retry.max_retries {
+                        plan.stats_mut().retry_exhausted += 1;
+                        plan.stats_mut().failed += 1;
+                        trajs[i].phase = Phase::Failed;
+                        trajs[i].metrics.finish_time = t_now;
+                        done += 1;
+                        // A failed trajectory frees its ring slice and
+                        // cache claims immediately.
+                        for wk in workers.iter_mut() {
+                            wk.kv.remove(&i);
+                        }
+                        control.router.evict_cache(i);
+                        if let Some(a) = auditor.as_mut() {
+                            a.record(
+                                t_now,
+                                AuditEvent::Failed {
+                                    traj: i,
+                                    reason: FailReason::RetryBudget,
+                                },
+                            );
+                        }
+                    } else {
+                        plan.stats_mut().retries += 1;
+                        let delay = plan.backoff(i, prev, attempt)
+                            * cfg.tool_scale;
+                        let outcome = plan.tool_outcome(i, prev, attempt);
+                        let lat = specs[i].steps[prev].tool_latency
+                            * cfg.tool_scale;
+                        let dur = if outcome == ToolOutcome::Hang {
+                            cfg.fault.tool_deadline * cfg.tool_scale
+                        } else {
+                            lat
+                        };
+                        trajs[i].tool_outcome = outcome;
+                        trajs[i].tool_deadline = t_now + delay + dur;
+                        trajs[i].metrics.tool_time += delay + dur;
+                        if let Some(a) = auditor.as_mut() {
+                            a.record(
+                                t_now,
+                                AuditEvent::ToolRetry {
+                                    traj: i,
+                                    attempt: attempt as usize,
+                                },
+                            );
+                        }
+                    }
+                    continue;
+                }
                 // Append tool output tokens to the context log.
                 let st = &specs[i];
-                let prev = trajs[i].step - 1;
                 let n_out = st.steps[prev].tool_output_tokens;
                 let base = trajs[i].log.len();
                 for p in 0..n_out {
@@ -426,8 +510,23 @@ pub fn serve_rollout(
                 trajs[id].phase = Phase::ToolWait;
                 let lat =
                     specs[id].steps[step].tool_latency * cfg.tool_scale;
-                trajs[id].tool_deadline = now() + lat;
-                trajs[id].metrics.tool_time += lat;
+                trajs[id].tool_attempts = 0;
+                let (dur, outcome) = match faults.as_mut() {
+                    Some(plan) => {
+                        let o = plan.tool_outcome(id, step, 0);
+                        let d = if o == ToolOutcome::Hang {
+                            // Hung call: cut off at the wall deadline.
+                            cfg.fault.tool_deadline * cfg.tool_scale
+                        } else {
+                            lat
+                        };
+                        (d, o)
+                    }
+                    None => (lat, ToolOutcome::Ok),
+                };
+                trajs[id].tool_outcome = outcome;
+                trajs[id].tool_deadline = now() + dur;
+                trajs[id].metrics.tool_time += dur;
                 if let Some(a) = auditor.as_mut() {
                     a.record(
                         now(),
@@ -443,7 +542,9 @@ pub fn serve_rollout(
                     let active: Vec<(usize, f64, usize)> = trajs
                         .iter()
                         .enumerate()
-                        .filter(|(_, t)| t.phase != Phase::Done)
+                        .filter(|(_, t)| {
+                            !matches!(t.phase, Phase::Done | Phase::Failed)
+                        })
                         .map(|(tid, t)| {
                             let host = workers
                                 .iter()
@@ -531,6 +632,16 @@ pub fn serve_rollout(
     } else {
         migration_us.iter().sum::<f64>() / migration_us.len() as f64
     };
+    let fault_stats = match faults.as_mut() {
+        Some(p) => {
+            p.stats_mut().recovered = trajs
+                .iter()
+                .filter(|t| t.faulted && t.phase == Phase::Done)
+                .count();
+            *p.stats()
+        }
+        None => FaultStats::default(),
+    };
     Ok(ServeOutcome {
         report: RolloutReport::from_trajectories(
             trajs.into_iter().map(|t| t.metrics).collect(),
@@ -540,6 +651,7 @@ pub fn serve_rollout(
         migrated_bytes,
         mean_migration_us: mean_mig,
         audit: auditor,
+        faults: fault_stats,
     })
 }
 
@@ -646,6 +758,13 @@ mod tests {
             assert_eq!(last.tool_latency, 0.0);
             assert!(!last.tool_failed);
         }
+    }
+
+    #[test]
+    fn fault_injection_defaults_off() {
+        // Fault-free serving must be untouched by the chaos machinery.
+        let cfg = ServeConfig::default();
+        assert!(!cfg.fault.enabled);
     }
 
     #[test]

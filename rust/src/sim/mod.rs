@@ -22,13 +22,15 @@
 //! engine only recomputes a worker's earliest segment completion when
 //! its active set changes — a standard fluid/DES hybrid.
 
-use crate::audit::{AuditEvent, Auditor};
+use crate::audit::{AuditEvent, Auditor, FailReason};
 use crate::config::SimConfig;
 use crate::coordinator::control::ControlPlane;
 use crate::coordinator::migration::MigrationRequest;
 use crate::coordinator::scheduler::{
-    schedule_worker, ActiveSet, ScheduleAction, SchedulerQueue, StepRequest,
+    schedule_worker_degraded, ActiveSet, ScheduleAction, SchedulerQueue,
+    StepRequest,
 };
+use crate::fault::{FaultPlan, FaultStats, ToolOutcome};
 use crate::metrics::{RolloutReport, TrajectoryMetrics};
 use crate::tools::{FaasConfig, ToolManager};
 use crate::workload::TrajectorySpec;
@@ -48,6 +50,9 @@ enum Phase {
     /// migration overhead — Table 1 discussion).
     MigrationWait,
     Done,
+    /// Terminally failed under fault injection (retry budget exhausted).
+    /// Counts toward conservation alongside `Done`.
+    Failed,
 }
 
 #[derive(Debug)]
@@ -70,6 +75,16 @@ struct TrajState {
     migrating: bool,
     /// When the current queue wait started.
     enqueued_at: f64,
+    /// Tool attempts made for the current step (0 = first not yet done).
+    tool_attempts: u32,
+    /// Step index the current tool call belongs to.
+    tool_step: usize,
+    /// Nominal tool latency of the current step (seconds).
+    tool_lat: f64,
+    /// Hit at least one failure-class fault (for recovery accounting).
+    faulted: bool,
+    /// Terminal failure deferred until an in-flight migration lands.
+    pending_fail: bool,
     metrics: TrajectoryMetrics,
 }
 
@@ -90,7 +105,15 @@ enum Event {
     /// Earliest segment completion on a worker (validity via version).
     Segment { worker: usize, version: u64 },
     ToolDone { traj: usize },
-    MigrationDone { traj: usize, dst: usize },
+    /// A tool attempt failed (error return or deadline-expired hang).
+    ToolFailed { traj: usize },
+    /// Backoff elapsed: launch the next tool attempt.
+    ToolRetry { traj: usize },
+    /// Fault plan: `worker` crashes now.
+    WorkerCrash { worker: usize },
+    /// KV transfer `id` landed (id matches `Simulator::inflight`; a
+    /// crash-aborted transfer's stale event no longer matches anything).
+    MigrationDone { traj: usize, dst: usize, id: u64 },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -135,10 +158,24 @@ pub struct Simulator<'a> {
     now: f64,
     seq: u64,
     req_seq: u64,
-    /// In-flight migrations (needed to release endpoints on completion).
-    inflight: Vec<MigrationRequest>,
+    /// In-flight migrations keyed by a unique transfer id (needed to
+    /// release endpoints on completion and to drop stale completion
+    /// events for crash-aborted transfers).
+    inflight: Vec<(u64, MigrationRequest)>,
+    mig_seq: u64,
     /// Optional lifecycle-invariant auditor (always on in debug builds).
     audit: Option<Auditor>,
+    /// Seeded fault plan (None unless `cfg.fault.enabled` — fault-free
+    /// runs construct nothing and draw no extra randomness).
+    faults: Option<FaultPlan>,
+    /// Crashed workers (fault runs only).
+    crashed: Vec<bool>,
+    /// Degraded-mode admission active (set on first crash, sticky:
+    /// in-episode capacity loss is permanent).
+    degraded: bool,
+    /// Audit-only shadow of each trajectory's charged KV residency:
+    /// (worker, bytes currently charged to that worker's ring).
+    kv_shadow: Vec<(Option<usize>, u64)>,
 }
 
 impl<'a> Simulator<'a> {
@@ -162,7 +199,7 @@ impl<'a> Simulator<'a> {
                     * control.allocation.degrees[w],
             })
             .collect();
-        let trajs = specs
+        let trajs: Vec<TrajState> = specs
             .iter()
             .map(|s| TrajState {
                 phase: Phase::Queued,
@@ -174,22 +211,37 @@ impl<'a> Simulator<'a> {
                 predicted: 0.0,
                 migrating: false,
                 enqueued_at: 0.0,
+                tool_attempts: 0,
+                tool_step: 0,
+                tool_lat: 0.0,
+                faulted: false,
+                pending_fail: false,
                 metrics: TrajectoryMetrics { id: s.id, ..Default::default() },
             })
             .collect();
+        let faults = if cfg.fault.enabled {
+            Some(FaultPlan::new(&cfg.fault, n_workers))
+        } else {
+            None
+        };
         Simulator {
             cfg,
             specs,
             control,
             tools: ToolManager::new(FaasConfig::default()),
             workers,
+            kv_shadow: vec![(None, 0); trajs.len()],
             trajs,
             heap: BinaryHeap::new(),
             now: 0.0,
             seq: 0,
             req_seq: 0,
             inflight: Vec::new(),
+            mig_seq: 0,
             audit: None,
+            faults,
+            crashed: vec![false; n_workers],
+            degraded: false,
         }
     }
 
@@ -201,6 +253,18 @@ impl<'a> Simulator<'a> {
         a.set_worker_slots(
             self.workers.iter().map(|w| w.max_slots).collect(),
         );
+        // KV-ring accounting bounds (invariant 8): each trajectory's
+        // charge can never exceed its own full-context footprint, and a
+        // worker's ring can never exceed the sum of what the batch could
+        // legally pin there (the conservation-style cap — tight per-traj,
+        // loose per-worker, so placement churn cannot false-positive).
+        let traj_limits: Vec<u64> = self
+            .specs
+            .iter()
+            .map(|s| self.kv_bytes_of(self.full_context_tokens(s)))
+            .collect();
+        let total: u64 = traj_limits.iter().sum();
+        a.set_kv_limits(vec![total; self.workers.len()], traj_limits);
         self.control.audit_provision(&mut a, 0.0);
         for (i, s) in self.specs.iter().enumerate() {
             if let Some(w) = self.control.router.assigned_worker(s.id) {
@@ -216,6 +280,62 @@ impl<'a> Simulator<'a> {
         }
     }
 
+    /// Full-context token count of a trajectory (prompt + every step's
+    /// generation and tool output) — its maximum KV footprint.
+    fn full_context_tokens(&self, spec: &TrajectorySpec) -> usize {
+        spec.prompt_tokens
+            + spec
+                .steps
+                .iter()
+                .map(|s| s.gen_tokens + s.tool_output_tokens)
+                .sum::<usize>()
+    }
+
+    /// KV bytes for `tokens` context tokens. Integer rounding is
+    /// monotone in `tokens`, so a charge within the token bound is
+    /// always within the byte bound.
+    fn kv_bytes_of(&self, tokens: usize) -> u64 {
+        (tokens as f64 * self.cfg.model.kv_bytes_per_token).round() as u64
+    }
+
+    /// Move the audited KV residency of `traj` to (`worker`, `tokens`):
+    /// releases whatever was previously charged, then charges the new
+    /// residency. Audit-only bookkeeping — no-op without an auditor, and
+    /// excluded from decision traces, so fault-free behaviour is
+    /// unchanged.
+    fn audit_kv_set(
+        &mut self,
+        traj: usize,
+        worker: Option<usize>,
+        tokens: usize,
+    ) {
+        if self.audit.is_none() {
+            return;
+        }
+        let bytes = worker
+            .map(|_| self.kv_bytes_of(tokens))
+            .unwrap_or(0);
+        let (old_w, old_b) = self.kv_shadow[traj];
+        if old_w == worker && old_b == bytes {
+            return;
+        }
+        if let Some(w) = old_w {
+            if old_b > 0 {
+                self.audit_ev(AuditEvent::KvRelease {
+                    traj,
+                    worker: w,
+                    bytes: old_b,
+                });
+            }
+        }
+        if let Some(w) = worker {
+            if bytes > 0 {
+                self.audit_ev(AuditEvent::KvCharge { traj, worker: w, bytes });
+            }
+        }
+        self.kv_shadow[traj] = (worker, bytes);
+    }
+
     /// Run the rollout to completion and return the report. Debug/test
     /// builds always audit and panic on any invariant violation; release
     /// builds audit only if [`Simulator::enable_audit`] was called.
@@ -223,7 +343,7 @@ impl<'a> Simulator<'a> {
         if cfg!(debug_assertions) && self.audit.is_none() {
             self.enable_audit();
         }
-        let (report, audit) = self.run_collect();
+        let (report, audit, _) = self.run_collect();
         if let Some(a) = &audit {
             a.assert_clean("sim");
         }
@@ -236,11 +356,21 @@ impl<'a> Simulator<'a> {
         if self.audit.is_none() {
             self.enable_audit();
         }
-        let (report, audit) = self.run_collect();
+        let (report, audit, _) = self.run_collect();
         (report, audit.expect("auditor attached above"))
     }
 
-    fn run_collect(mut self) -> (RolloutReport, Option<Auditor>) {
+    /// Run a chaos (fault-injected) rollout: auditor always attached,
+    /// fault/recovery counters returned alongside.
+    pub fn run_chaos(mut self) -> (RolloutReport, Auditor, FaultStats) {
+        if self.audit.is_none() {
+            self.enable_audit();
+        }
+        let (report, audit, stats) = self.run_collect();
+        (report, audit.expect("auditor attached above"), stats)
+    }
+
+    fn run_collect(mut self) -> (RolloutReport, Option<Auditor>, FaultStats) {
         // Submit every trajectory's first step.
         for i in 0..self.specs.len() {
             self.trajs[i].predicted =
@@ -251,6 +381,18 @@ impl<'a> Simulator<'a> {
         let ids: Vec<usize> = (0..self.workers.len()).collect();
         for w in ids {
             self.pump_worker(w);
+        }
+        // Arm the fault plan's worker crashes as ordinary events.
+        if let Some(p) = self.faults.as_ref() {
+            let crashes: Vec<(usize, f64)> = (0..self.workers.len())
+                .filter_map(|w| {
+                    let t = p.crash_time(w);
+                    t.is_finite().then_some((w, t))
+                })
+                .collect();
+            for (w, t) in crashes {
+                self.push_event(t, Event::WorkerCrash { worker: w });
+            }
         }
 
         let mut safety: u64 = 0;
@@ -271,16 +413,44 @@ impl<'a> Simulator<'a> {
                     self.now = t.time;
                     self.on_tool_done(traj);
                 }
-                Event::MigrationDone { traj, dst } => {
+                Event::ToolFailed { traj } => {
                     self.now = t.time;
-                    self.on_migration_done(traj, dst);
+                    self.on_tool_failed(traj);
+                }
+                Event::ToolRetry { traj } => {
+                    self.now = t.time;
+                    self.on_tool_retry(traj);
+                }
+                Event::WorkerCrash { worker } => {
+                    self.now = t.time;
+                    self.on_worker_crash(worker);
+                }
+                Event::MigrationDone { traj, dst, id } => {
+                    self.now = t.time;
+                    self.on_migration_done(traj, dst, id);
                 }
             }
         }
         debug_assert!(
-            self.trajs.iter().all(|t| t.phase == Phase::Done),
+            self.trajs
+                .iter()
+                .all(|t| matches!(t.phase, Phase::Done | Phase::Failed)),
             "simulation drained with unfinished trajectories"
         );
+        let stats = {
+            let recovered = self
+                .trajs
+                .iter()
+                .filter(|t| t.faulted && t.phase == Phase::Done)
+                .count();
+            match self.faults.as_mut() {
+                Some(p) => {
+                    p.stats_mut().recovered = recovered;
+                    *p.stats()
+                }
+                None => FaultStats::default(),
+            }
+        };
         let mut audit = self.audit.take();
         if let Some(a) = audit.as_mut() {
             a.check_complete(self.now);
@@ -288,7 +458,7 @@ impl<'a> Simulator<'a> {
         let report = RolloutReport::from_trajectories(
             self.trajs.into_iter().map(|t| t.metrics).collect(),
         );
-        (report, audit)
+        (report, audit, stats)
     }
 
     // ---- helpers ---------------------------------------------------------
@@ -301,7 +471,11 @@ impl<'a> Simulator<'a> {
     /// Per-trajectory decode rate on `worker` right now (token-equiv/s).
     fn worker_rate(&self, worker: usize) -> f64 {
         let batch = self.workers[worker].active.len().max(1);
-        1.0 / self.control.worker_token_time_at(worker, batch)
+        let rate = 1.0 / self.control.worker_token_time_at(worker, batch);
+        match self.faults.as_ref() {
+            Some(p) => rate / p.slowdown(worker),
+            None => rate,
+        }
     }
 
     /// Settle elapsed work on a worker's active set up to `self.now`.
@@ -398,13 +572,17 @@ impl<'a> Simulator<'a> {
 
     /// Admit / preempt until the worker reaches a fixed point.
     fn pump_worker(&mut self, worker: usize) {
+        if self.crashed[worker] {
+            return;
+        }
         loop {
             let w = &mut self.workers[worker];
-            let action = schedule_worker(
+            let action = schedule_worker_degraded(
                 &mut w.queue,
                 &w.active,
                 w.max_slots,
                 self.cfg.policy.preemption,
+                self.degraded,
             );
             match action {
                 ScheduleAction::Idle => break,
@@ -501,9 +679,13 @@ impl<'a> Simulator<'a> {
                 st.phase = Phase::Done;
                 st.metrics.finish_time = self.now;
             }
+            self.audit_kv_set(traj, None, 0);
             self.audit_ev(AuditEvent::Completed { traj, worker });
             return;
         }
+        // Ring accounting: the full context is now resident here (any
+        // stale copy charged elsewhere is released first).
+        self.audit_kv_set(traj, Some(worker), ctx_after);
 
         // Progressive prediction refresh at the step boundary (§4.1 —
         // runs alongside the tool call, off the critical path).
@@ -518,11 +700,15 @@ impl<'a> Simulator<'a> {
         // are ordered by the priority captured at push time; the next
         // push uses the refreshed value (the paper re-sorts per event).
 
-        // Tool call through the serverless manager.
-        let lat = spec.steps[step].tool_latency.max(1e-4);
-        let inv = self.tools.invoke(spec.domain, self.now, lat);
-        self.trajs[traj].metrics.tool_time += inv.finish - self.now;
-        self.push_event(inv.finish, Event::ToolDone { traj });
+        // Tool call through the serverless manager (fault plan decides
+        // the attempt's outcome; retries re-enter start_tool_attempt).
+        {
+            let st = &mut self.trajs[traj];
+            st.tool_step = step;
+            st.tool_lat = spec.steps[step].tool_latency.max(1e-4);
+            st.tool_attempts = 0;
+        }
+        self.start_tool_attempt(traj);
 
         // Opportunistic migration check (§5.3): only while tool-parked.
         if self.cfg.policy.migration {
@@ -530,7 +716,9 @@ impl<'a> Simulator<'a> {
                 .trajs
                 .iter()
                 .enumerate()
-                .filter(|(_, t)| t.phase != Phase::Done)
+                .filter(|(_, t)| {
+                    !matches!(t.phase, Phase::Done | Phase::Failed)
+                })
                 .map(|(id, t)| {
                     (id, t.predicted, t.kv_worker.unwrap_or(0))
                 })
@@ -564,34 +752,51 @@ impl<'a> Simulator<'a> {
                 src: req.src_worker,
                 dst: req.dst_worker,
             });
+            self.mig_seq += 1;
+            let id = self.mig_seq;
             self.push_event(
                 self.now + t,
-                Event::MigrationDone { traj: req.traj_id, dst: req.dst_worker },
+                Event::MigrationDone {
+                    traj: req.traj_id,
+                    dst: req.dst_worker,
+                    id,
+                },
             );
-            self.inflight.push(req);
+            self.inflight.push((id, req));
         }
     }
 
-    fn on_migration_done(&mut self, traj: usize, dst: usize) {
-        if let Some(i) =
-            self.inflight.iter().position(|r| r.traj_id == traj)
-        {
-            let req = self.inflight.swap_remove(i);
-            self.control.transmissions.complete(&req);
-            self.audit_ev(AuditEvent::Migrated {
-                traj,
-                src: req.src_worker,
-                dst,
-            });
-        }
+    fn on_migration_done(&mut self, traj: usize, dst: usize, id: u64) {
+        let Some(i) =
+            self.inflight.iter().position(|(mid, _)| *mid == id)
+        else {
+            // Crash-aborted transfer: its completion event is stale.
+            return;
+        };
+        let (_, req) = self.inflight.swap_remove(i);
+        self.control.transmissions.complete(&req);
+        self.audit_ev(AuditEvent::Migrated {
+            traj,
+            src: req.src_worker,
+            dst,
+        });
         {
             let st = &mut self.trajs[traj];
             st.migrating = false;
             st.kv_worker = Some(dst);
             st.metrics.migrations += 1;
         }
+        let kv_tokens = self.trajs[traj].kv_tokens;
+        // Ring accounting follows the transfer: release src, charge dst.
+        self.audit_kv_set(traj, Some(dst), kv_tokens);
         self.control.router.reassign(traj, dst);
-        self.control.router.set_cache(traj, dst, self.trajs[traj].kv_tokens);
+        self.control.router.set_cache(traj, dst, kv_tokens);
+        // Terminal failure deferred until the transfer landed?
+        if self.trajs[traj].pending_fail {
+            self.fail_trajectory(traj, FailReason::RetryBudget);
+            self.pump_migrations();
+            return;
+        }
         // Tool already came back and was blocked on us? Resume it.
         if self.trajs[traj].phase == Phase::MigrationWait {
             self.enqueue_step(traj);
@@ -614,6 +819,284 @@ impl<'a> Simulator<'a> {
         }
         self.enqueue_step(traj);
     }
+
+    // ---- fault injection & recovery --------------------------------------
+
+    /// Launch tool attempt `tool_attempts` (0-based) for the current
+    /// step of `traj`, consulting the fault plan for the outcome. With
+    /// no plan the attempt always succeeds and pays no spike — exactly
+    /// the pre-fault behaviour.
+    fn start_tool_attempt(&mut self, traj: usize) {
+        let (step, lat, attempt) = {
+            let st = &self.trajs[traj];
+            (st.tool_step, st.tool_lat, st.tool_attempts)
+        };
+        let domain = self.specs[traj].domain;
+        let (outcome, cold_mult) = match self.faults.as_mut() {
+            Some(p) => (
+                p.tool_outcome(traj, step, attempt),
+                p.cold_multiplier(traj, step, attempt),
+            ),
+            None => (ToolOutcome::Ok, 1.0),
+        };
+        match outcome {
+            ToolOutcome::Ok => {
+                let inv = self
+                    .tools
+                    .invoke_spiked(domain, self.now, lat, cold_mult);
+                if cold_mult > 1.0 && inv.cold {
+                    if let Some(p) = self.faults.as_mut() {
+                        p.stats_mut().cold_spikes += 1;
+                    }
+                }
+                self.trajs[traj].metrics.tool_time += inv.finish - self.now;
+                self.push_event(inv.finish, Event::ToolDone { traj });
+            }
+            ToolOutcome::Fail => {
+                // The failed attempt occupies the FaaS substrate for its
+                // full duration; the error only surfaces at the end.
+                let inv = self
+                    .tools
+                    .invoke_spiked(domain, self.now, lat, cold_mult);
+                self.trajs[traj].faulted = true;
+                self.trajs[traj].metrics.tool_time += inv.finish - self.now;
+                self.push_event(inv.finish, Event::ToolFailed { traj });
+            }
+            ToolOutcome::Hang => {
+                // The backend goes silent: the container stays tied up
+                // and only the caller-side deadline ends the wait.
+                let deadline = self.cfg.fault.tool_deadline;
+                let _ = self
+                    .tools
+                    .invoke_spiked(domain, self.now, deadline, cold_mult);
+                self.trajs[traj].faulted = true;
+                self.trajs[traj].metrics.tool_time += deadline;
+                self.push_event(
+                    self.now + deadline,
+                    Event::ToolFailed { traj },
+                );
+            }
+        }
+    }
+
+    /// A tool attempt failed or its deadline expired: retry with
+    /// exponential backoff + jitter, or terminally fail the trajectory
+    /// once the retry budget is exhausted.
+    fn on_tool_failed(&mut self, traj: usize) {
+        if matches!(self.trajs[traj].phase, Phase::Done | Phase::Failed) {
+            return;
+        }
+        let attempt = self.trajs[traj].tool_attempts + 1;
+        self.trajs[traj].tool_attempts = attempt;
+        if attempt > self.cfg.fault.retry.max_retries {
+            if let Some(p) = self.faults.as_mut() {
+                p.stats_mut().retry_exhausted += 1;
+            }
+            self.fail_trajectory(traj, FailReason::RetryBudget);
+            return;
+        }
+        let step = self.trajs[traj].tool_step;
+        let delay = self
+            .faults
+            .as_ref()
+            .map(|p| p.backoff(traj, step, attempt))
+            .unwrap_or(0.0);
+        if let Some(p) = self.faults.as_mut() {
+            p.stats_mut().retries += 1;
+        }
+        self.audit_ev(AuditEvent::ToolRetry {
+            traj,
+            attempt: attempt as usize,
+        });
+        self.push_event(self.now + delay, Event::ToolRetry { traj });
+    }
+
+    fn on_tool_retry(&mut self, traj: usize) {
+        if matches!(self.trajs[traj].phase, Phase::Done | Phase::Failed) {
+            return;
+        }
+        self.start_tool_attempt(traj);
+    }
+
+    /// Terminally fail `traj`: release its ring charge, scrub it from
+    /// the control plane, and count it toward conservation (completed +
+    /// failed == submitted). Deferred while a KV transfer is in flight
+    /// so migration exclusivity stays intact.
+    fn fail_trajectory(&mut self, traj: usize, reason: FailReason) {
+        if self.trajs[traj].migrating {
+            self.trajs[traj].pending_fail = true;
+            return;
+        }
+        self.audit_kv_set(traj, None, 0);
+        {
+            let st = &mut self.trajs[traj];
+            st.phase = Phase::Failed;
+            st.pending_fail = false;
+            st.worker = None;
+            st.kv_worker = None;
+            st.kv_tokens = 0;
+            st.metrics.finish_time = self.now;
+        }
+        self.control.router.evict_cache(traj);
+        self.control.transmissions.cancel(traj);
+        if let Some(p) = self.faults.as_mut() {
+            p.stats_mut().failed += 1;
+        }
+        self.audit_ev(AuditEvent::Failed { traj, reason });
+    }
+
+    /// Tear down the sim-side residency `traj` lost when `worker`
+    /// crashed, and release its ring charge if that is where it lived.
+    fn displace_kv(&mut self, traj: usize, worker: usize) {
+        {
+            let st = &mut self.trajs[traj];
+            st.worker = None;
+            if st.kv_worker == Some(worker) {
+                st.kv_worker = None;
+                st.kv_tokens = 0;
+            }
+        }
+        if self.kv_shadow[traj].0 == Some(worker) {
+            self.audit_kv_set(traj, None, 0);
+        }
+    }
+
+    /// Fault plan: `worker` crashes now. Tear down every residency on
+    /// it, abort in-flight transfers touching it, fence it out of the
+    /// control plane, and re-place the displaced trajectories on the
+    /// survivors under degraded-mode admission.
+    fn on_worker_crash(&mut self, worker: usize) {
+        if self.crashed[worker] {
+            return;
+        }
+        // Never crash the last survivor: the fault model assumes the
+        // cluster retains enough capacity to finish the episode.
+        let alive = self.crashed.iter().filter(|c| !**c).count();
+        if alive <= 1 {
+            return;
+        }
+        // Crash scheduled past the drain: nothing to recover.
+        if self
+            .trajs
+            .iter()
+            .all(|t| matches!(t.phase, Phase::Done | Phase::Failed))
+        {
+            return;
+        }
+        self.settle(worker);
+        self.crashed[worker] = true;
+        if let Some(p) = self.faults.as_mut() {
+            p.stats_mut().worker_crashes += 1;
+        }
+        self.audit_ev(AuditEvent::WorkerCrashed { worker });
+        if !self.degraded {
+            self.degraded = true;
+            self.audit_ev(AuditEvent::Degraded { on: true });
+        }
+
+        // 1. Displace the active set (the slots die with the worker).
+        let mut displaced: Vec<usize> = Vec::new();
+        let mut active_ids: Vec<usize> =
+            self.workers[worker].active.ids().collect();
+        active_ids.sort_unstable();
+        for id in active_ids {
+            self.workers[worker].active.remove(id);
+            self.control.router.on_leave(worker);
+            self.audit_ev(AuditEvent::Displaced { traj: id, worker });
+            self.displace_kv(id, worker);
+            displaced.push(id);
+        }
+        // 2. Displace queued step requests.
+        let queued: Vec<usize> = self
+            .trajs
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                t.phase == Phase::Queued && t.worker == Some(worker)
+            })
+            .map(|(id, _)| id)
+            .collect();
+        for id in queued {
+            self.workers[worker].queue.remove_trajectory(id);
+            self.control.router.on_leave(worker);
+            self.audit_ev(AuditEvent::Displaced { traj: id, worker });
+            self.displace_kv(id, worker);
+            displaced.push(id);
+        }
+        // 3. Tool-parked trajectories whose only residency here is the
+        //    KV prefix: tear it down (forces a full-context recompute,
+        //    charged through the ring accounting on re-admission).
+        let parked: Vec<usize> = self
+            .trajs
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                matches!(t.phase, Phase::ToolWait | Phase::MigrationWait)
+                    && t.kv_worker == Some(worker)
+            })
+            .map(|(id, _)| id)
+            .collect();
+        for id in parked {
+            self.audit_ev(AuditEvent::Displaced { traj: id, worker });
+            self.displace_kv(id, worker);
+            self.trajs[id].faulted = true;
+            if let Some(p) = self.faults.as_mut() {
+                p.stats_mut().displaced += 1;
+            }
+        }
+        // 4. Abort in-flight KV transfers touching the dead worker; the
+        //    stale MigrationDone events no longer match any transfer id.
+        let aborted: Vec<(u64, MigrationRequest)> = {
+            let (dead, keep): (Vec<_>, Vec<_>) =
+                self.inflight.drain(..).partition(|(_, r)| {
+                    r.src_worker == worker || r.dst_worker == worker
+                });
+            self.inflight = keep;
+            dead
+        };
+        let mut resume: Vec<usize> = Vec::new();
+        for (_, req) in aborted {
+            self.control.transmissions.complete(&req);
+            self.trajs[req.traj_id].migrating = false;
+            self.audit_ev(AuditEvent::MigrationAborted {
+                traj: req.traj_id,
+                src: req.src_worker,
+                dst: req.dst_worker,
+            });
+            if self.trajs[req.traj_id].pending_fail {
+                // A terminal failure was parked behind this transfer;
+                // resolve it now that the transfer is gone.
+                self.fail_trajectory(req.traj_id, FailReason::RetryBudget);
+            } else if self.trajs[req.traj_id].phase == Phase::MigrationWait {
+                resume.push(req.traj_id);
+            }
+        }
+        // 5. Fence the control plane and invalidate pending events.
+        self.control.on_worker_crash(worker);
+        self.workers[worker].version += 1;
+        self.workers[worker].last_update = self.now;
+
+        // 6. Re-place everything that lost its execution residency.
+        if let Some(p) = self.faults.as_mut() {
+            p.stats_mut().displaced += displaced.len();
+        }
+        for id in displaced {
+            self.trajs[id].faulted = true;
+            self.enqueue_step(id);
+        }
+        resume.sort_unstable();
+        for id in resume {
+            self.trajs[id].faulted = true;
+            self.enqueue_step(id);
+        }
+        // Survivors may now admit under degraded-mode rules.
+        let alive_ids: Vec<usize> = (0..self.workers.len())
+            .filter(|&w| !self.crashed[w])
+            .collect();
+        for w in alive_ids {
+            self.pump_worker(w);
+        }
+    }
 }
 
 /// Convenience: simulate one rollout batch end-to-end.
@@ -633,6 +1116,18 @@ pub fn simulate_audited(
     specs: &[TrajectorySpec],
 ) -> (RolloutReport, Auditor) {
     Simulator::new(cfg, history, specs).run_audited()
+}
+
+/// Simulate under the configured fault plan (CLI `--faults`): auditor
+/// attached, fault-injection and recovery counters returned. With
+/// `cfg.fault.enabled` unset this degenerates to [`simulate_audited`]
+/// plus zeroed stats.
+pub fn simulate_chaos(
+    cfg: &SimConfig,
+    history: &[TrajectorySpec],
+    specs: &[TrajectorySpec],
+) -> (RolloutReport, Auditor, FaultStats) {
+    Simulator::new(cfg, history, specs).run_chaos()
 }
 
 #[cfg(test)]
@@ -837,5 +1332,184 @@ mod tests {
         let r = simulate(&cfg, &history, &specs);
         assert_eq!(r.trajectories.len(), 16);
         assert!(r.makespan > 0.0);
+    }
+
+    // ---- fault injection & recovery -------------------------------------
+
+    use crate::fault::FaultConfig;
+
+    fn chaos_cfg(fault: FaultConfig) -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.n_gpus = 8;
+        cfg.cluster.max_batch_per_worker = 16;
+        cfg.policy = PolicyConfig::heddle();
+        cfg.seed = 5;
+        cfg.fault = fault;
+        cfg
+    }
+
+    #[test]
+    fn quiescent_fault_plan_is_decision_identical_to_disabled() {
+        // With the chaos machinery armed but every probability zeroed,
+        // the decision trace must be byte-identical to a fault-free run:
+        // the plan draws no RNG that steers scheduling.
+        use crate::audit::diff_decisions;
+        let history = history_workload(Domain::Coding, 5);
+        let specs =
+            generate(&WorkloadConfig::new(Domain::Coding, 3, 5));
+        let off = chaos_cfg(FaultConfig::default());
+        assert!(!off.fault.enabled, "faults must default to off");
+        let quiet = chaos_cfg(FaultConfig::quiescent(9));
+        let (ra, a) = simulate_audited(&off, &history, &specs);
+        let (rb, b, stats) = simulate_chaos(&quiet, &history, &specs);
+        let diff = diff_decisions(&a, &b);
+        assert!(diff.is_empty(), "quiescent plan diverged: {diff:?}");
+        assert_eq!(ra.makespan, rb.makespan);
+        assert_eq!(stats.injected(), 0);
+        assert_eq!(stats.failed, 0);
+    }
+
+    #[test]
+    fn chaos_conservation_property() {
+        // Property (ISSUE 7): under an arbitrary fault plan, every
+        // submitted trajectory either completes or terminally fails with
+        // an audited reason -- and the auditor sees zero violations.
+        crate::testkit::check("chaos_conservation", 6, |g| {
+            let mut rng = g.rng();
+            let mut fault = FaultConfig::default();
+            fault.enabled = true;
+            fault.seed = rng.next_u64();
+            fault.tool_fail_prob = rng.f64() * 0.4;
+            fault.tool_hang_prob = rng.f64() * 0.2;
+            fault.worker_crash_prob = rng.f64();
+            fault.worker_mttf = 20.0 + rng.f64() * 200.0;
+            fault.straggler_prob = rng.f64() * 0.5;
+            fault.cold_spike_prob = rng.f64() * 0.5;
+            let mut cfg = chaos_cfg(fault);
+            cfg.seed = rng.next_u64();
+            let history = history_workload(Domain::Coding, cfg.seed);
+            let specs = generate(&WorkloadConfig::new(
+                Domain::Coding,
+                2,
+                cfg.seed,
+            ));
+            let (r, audit, stats) = simulate_chaos(&cfg, &history, &specs);
+            crate::prop_assert!(
+                audit.ok(),
+                "auditor violations under faults: {}",
+                audit.report_violations()
+            );
+            crate::prop_assert!(
+                audit.completed() + audit.failed() == audit.submitted(),
+                "conservation broken: {} done + {} failed != {} submitted",
+                audit.completed(),
+                audit.failed(),
+                audit.submitted()
+            );
+            crate::prop_assert!(
+                audit.submitted() == specs.len(),
+                "submitted {} != specs {}",
+                audit.submitted(),
+                specs.len()
+            );
+            crate::prop_assert!(
+                r.trajectories.len() == specs.len(),
+                "report must carry every trajectory, even failed ones"
+            );
+            crate::prop_assert!(
+                stats.failed == audit.failed(),
+                "stats.failed {} != audited failures {}",
+                stats.failed,
+                audit.failed()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_trajectories_terminally() {
+        // Every tool call fails: each trajectory with a tool step burns
+        // its full retry budget (1 + max_retries attempts) and then
+        // terminally fails with an audited `retry_budget` reason.
+        let mut fault = FaultConfig::quiescent(3);
+        fault.tool_fail_prob = 1.0;
+        let cfg = chaos_cfg(fault);
+        let history = history_workload(Domain::Coding, cfg.seed);
+        let specs =
+            generate(&WorkloadConfig::new(Domain::Coding, 2, cfg.seed));
+        let with_tools =
+            specs.iter().filter(|s| s.n_steps() >= 2).count();
+        assert!(with_tools > 0, "workload must exercise tool steps");
+        let (_, audit, stats) = simulate_chaos(&cfg, &history, &specs);
+        assert!(audit.ok(), "{}", audit.report_violations());
+        assert_eq!(stats.retry_exhausted, with_tools);
+        assert_eq!(audit.failed(), with_tools);
+        assert_eq!(audit.completed(), specs.len() - with_tools);
+        // Budget accounting: per failure, max_retries retries were
+        // scheduled and (1 + max_retries) attempts actually failed.
+        let per = cfg.fault.retry.max_retries as usize;
+        assert_eq!(stats.retries, with_tools * per);
+        assert_eq!(stats.tool_failures, with_tools * (per + 1));
+    }
+
+    #[test]
+    fn tool_hangs_hit_the_deadline_then_retry() {
+        let mut fault = FaultConfig::quiescent(4);
+        fault.tool_hang_prob = 1.0;
+        let cfg = chaos_cfg(fault);
+        let history = history_workload(Domain::Coding, cfg.seed);
+        let specs =
+            generate(&WorkloadConfig::new(Domain::Coding, 2, cfg.seed));
+        let with_tools =
+            specs.iter().filter(|s| s.n_steps() >= 2).count();
+        let (_, audit, stats) = simulate_chaos(&cfg, &history, &specs);
+        assert!(audit.ok(), "{}", audit.report_violations());
+        assert!(stats.tool_hangs > 0);
+        assert_eq!(stats.retry_exhausted, with_tools);
+        assert_eq!(
+            audit.completed() + audit.failed(),
+            audit.submitted()
+        );
+    }
+
+    #[test]
+    fn worker_crashes_displace_and_recover() {
+        // Pure crash chaos, no tool faults: displaced trajectories must
+        // be re-placed on survivors and still complete -- zero terminal
+        // failures, nonzero recoveries, auditor clean.
+        let mut fault = FaultConfig::quiescent(11);
+        fault.worker_crash_prob = 1.0;
+        fault.worker_mttf = 30.0;
+        let cfg = chaos_cfg(fault);
+        let history = history_workload(Domain::Coding, cfg.seed);
+        let specs =
+            generate(&WorkloadConfig::new(Domain::Coding, 4, cfg.seed));
+        let (r, audit, stats) = simulate_chaos(&cfg, &history, &specs);
+        assert!(audit.ok(), "{}", audit.report_violations());
+        assert!(stats.worker_crashes >= 1, "no crash fired");
+        assert!(stats.displaced > 0, "crash displaced nothing");
+        assert!(stats.recovered > 0, "no displaced trajectory recovered");
+        assert_eq!(audit.failed(), 0, "crashes alone must not lose work");
+        assert_eq!(audit.completed(), specs.len());
+        assert!(r.makespan > 0.0);
+    }
+
+    #[test]
+    fn same_fault_seed_runs_make_identical_decisions() {
+        use crate::audit::diff_decisions;
+        let mut fault = FaultConfig::default();
+        fault.enabled = true;
+        fault.seed = 17;
+        fault.worker_mttf = 40.0;
+        let cfg = chaos_cfg(fault);
+        let history = history_workload(Domain::Coding, cfg.seed);
+        let specs =
+            generate(&WorkloadConfig::new(Domain::Coding, 3, cfg.seed));
+        let (_, a, sa) = simulate_chaos(&cfg, &history, &specs);
+        let (_, b, sb) = simulate_chaos(&cfg, &history, &specs);
+        assert!(sa.injected() > 0, "chaos run injected nothing");
+        assert_eq!(sa, sb, "fault counters diverged across same-seed runs");
+        let diff = diff_decisions(&a, &b);
+        assert!(diff.is_empty(), "chaos decision divergence: {diff:?}");
     }
 }

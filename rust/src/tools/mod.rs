@@ -100,7 +100,20 @@ impl ToolManager {
 
     /// Admit a tool call of duration `exec_secs` for `domain` at `now`.
     pub fn invoke(&mut self, domain: Domain, now: f64, exec_secs: f64) -> Invocation {
-        let cfg_cold = self.cfg.cold_start;
+        self.invoke_spiked(domain, now, exec_secs, 1.0)
+    }
+
+    /// Like [`invoke`](Self::invoke), but any cold start this call pays
+    /// is scaled by `cold_mult` — the fault injector's cold-start spike
+    /// hook (1.0 = nominal platform behaviour).
+    pub fn invoke_spiked(
+        &mut self,
+        domain: Domain,
+        now: f64,
+        exec_secs: f64,
+        cold_mult: f64,
+    ) -> Invocation {
+        let cfg_cold = self.cfg.cold_start * cold_mult;
         let keep = self.cfg.keep_alive;
         let maxc = self.cfg.max_concurrency;
         let pool = &mut self.pools[pool_idx(domain)];
@@ -257,6 +270,23 @@ mod tests {
         tm.invoke(Domain::Coding, 0.0, 100.0);
         let b = tm.invoke(Domain::Math, 0.0, 1.0);
         assert!(!b.cold, "math pool unaffected by busy coding pool");
+    }
+
+    #[test]
+    fn cold_spike_scales_only_cold_starts() {
+        let mut tm = ToolManager::new(FaasConfig {
+            prewarm: 1,
+            cold_start: 0.25,
+            ..Default::default()
+        });
+        // Warm call: spike multiplier is irrelevant.
+        let warm = tm.invoke_spiked(Domain::Coding, 0.0, 1.0, 8.0);
+        assert!(!warm.cold);
+        assert_eq!(warm.start, 0.0);
+        // Cold call with an 8x spike: start delayed by 8 * 0.25.
+        let cold = tm.invoke_spiked(Domain::Coding, 0.0, 1.0, 8.0);
+        assert!(cold.cold);
+        assert!((cold.start - 2.0).abs() < 1e-12, "{cold:?}");
     }
 
     #[test]

@@ -7,7 +7,7 @@ use heddle::config::{ModelCost, PolicyConfig, SimConfig};
 use heddle::coordinator::control::ControlPlane;
 use heddle::metrics::RolloutReport;
 use heddle::predictor::history_workload;
-use heddle::sim::simulate;
+use heddle::sim::{simulate, simulate_chaos};
 use heddle::workload::{generate, Domain, WorkloadConfig};
 use std::path::{Path, PathBuf};
 
@@ -119,6 +119,56 @@ fn failure_injection_predictor_adversarial() {
     let oracle = simulate(&cfg2, &right_history, &specs);
     assert!(shifted.makespan <= oracle.makespan * 3.0);
     assert_eq!(shifted.total_tokens, oracle.total_tokens);
+}
+
+#[test]
+fn chaos_sweep_across_seeds_conserves_and_audits_clean() {
+    // The CI chaos gate, in-process: for several fault seeds, the
+    // default chaos mix must inject real faults, drain with zero
+    // auditor violations, and conserve every submitted trajectory.
+    for fault_seed in [1u64, 2, 3] {
+        let mut cfg = small_cfg(PolicyConfig::heddle());
+        cfg.fault.enabled = true;
+        cfg.fault.seed = fault_seed;
+        let history = history_workload(Domain::Coding, 5);
+        let specs = generate(&WorkloadConfig::new(Domain::Coding, 4, 5));
+        let (r, audit, stats) = simulate_chaos(&cfg, &history, &specs);
+        assert!(
+            audit.ok(),
+            "fault seed {fault_seed}: {}",
+            audit.report_violations()
+        );
+        assert_eq!(
+            audit.completed() + audit.failed(),
+            audit.submitted(),
+            "fault seed {fault_seed}: conservation broken"
+        );
+        assert_eq!(audit.submitted(), specs.len());
+        assert!(
+            stats.injected() > 0,
+            "fault seed {fault_seed}: chaos run injected nothing"
+        );
+        assert_eq!(r.trajectories.len(), specs.len());
+    }
+}
+
+#[test]
+fn chaos_runs_clean_under_every_policy() {
+    for policy in [
+        PolicyConfig::heddle(),
+        PolicyConfig::verl(1),
+        PolicyConfig::verl_star(1),
+        PolicyConfig::slime(1),
+    ] {
+        let mut cfg = small_cfg(policy);
+        cfg.fault.enabled = true;
+        cfg.fault.seed = 7;
+        let history = history_workload(Domain::Search, 5);
+        let specs = generate(&WorkloadConfig::new(Domain::Search, 3, 5));
+        let (_, audit, _) = simulate_chaos(&cfg, &history, &specs);
+        assert!(audit.ok(), "{}", audit.report_violations());
+        assert_eq!(audit.completed() + audit.failed(), audit.submitted());
+    }
 }
 
 #[test]
@@ -234,4 +284,44 @@ fn serve_small_rollout_end_to_end() {
         assert!(t.tokens_generated > 0);
         assert!(t.finish_time > 0.0);
     }
+}
+
+#[test]
+fn serve_chaos_exhausts_retry_budget_and_conserves() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let engine = heddle::runtime::Engine::load(&dir).unwrap();
+    let mut wl = WorkloadConfig::new(Domain::Math, 1, 7);
+    wl.group_size = 4;
+    let specs = generate(&wl);
+    let history = history_workload(Domain::Math, 7);
+    let mut cfg = heddle::serve::ServeConfig {
+        n_workers: 2,
+        max_batch: 2,
+        policy: PolicyConfig::heddle(),
+        seed: 7,
+        audit: true,
+        ..Default::default()
+    };
+    cfg.fault = heddle::fault::FaultConfig::quiescent(3);
+    cfg.fault.tool_fail_prob = 1.0;
+    // Every tool call fails terminally after the retry budget; the
+    // outcome is drawn from (traj, step, attempt) so the expected count
+    // is exactly the number of fitted specs that kept a tool step.
+    let max_seq = engine.manifest.model.max_seq;
+    let with_tools = specs
+        .iter()
+        .map(|s| heddle::serve::fit_to_ring(s, max_seq, cfg.token_scale))
+        .filter(|s| s.n_steps() >= 2)
+        .count();
+    let out =
+        heddle::serve::serve_rollout(&engine, &cfg, &history, &specs).unwrap();
+    let audit = out.audit.as_ref().expect("auditing enabled");
+    assert!(audit.ok(), "{}", audit.report_violations());
+    assert_eq!(audit.completed() + audit.failed(), audit.submitted());
+    assert_eq!(audit.failed(), with_tools);
+    assert_eq!(out.faults.retry_exhausted, with_tools);
+    assert_eq!(out.report.trajectories.len(), specs.len());
 }
