@@ -10,7 +10,7 @@ use heddle::config::{PolicyConfig, SimConfig};
 use heddle::model::sample_top_p;
 use heddle::predictor::history_workload;
 use heddle::runtime::Engine;
-use heddle::sim::simulate;
+use heddle::harness::Run;
 use heddle::util::rng::Rng;
 use heddle::workload::{generate, Domain, WorkloadConfig};
 use std::path::Path;
@@ -55,9 +55,9 @@ fn main() -> anyhow::Result<()> {
     cfg.policy = PolicyConfig::heddle();
     let history = history_workload(Domain::Coding, 1);
     let specs = generate(&WorkloadConfig::new(Domain::Coding, 6, 42));
-    let heddle = simulate(&cfg, &history, &specs);
+    let heddle = Run::new(&cfg, &history, &specs).exec()?.report;
     cfg.policy = PolicyConfig::slime(1);
-    let slime = simulate(&cfg, &history, &specs);
+    let slime = Run::new(&cfg, &history, &specs).exec()?.report;
     println!("{}", heddle.summary("heddle"));
     println!("{}", slime.summary("slime "));
     println!(

@@ -54,12 +54,12 @@ fn main() -> anyhow::Result<()> {
             out.wall_seconds,
             out.tokens_generated,
             out.throughput(),
-            out.report.tail_ratio(),
-            out.report.mean_queue_delay(),
-            out.report.total_migrations,
-            out.report.total_recomputed_tokens,
+            out.report().tail_ratio(),
+            out.report().mean_queue_delay(),
+            out.report().total_migrations,
+            out.report().total_recomputed_tokens,
         );
-        if out.report.total_migrations > 0 {
+        if out.report().total_migrations > 0 {
             println!(
                 "{:24} migration: {} total bytes, mean {:.0} µs/transfer",
                 "", out.migrated_bytes, out.mean_migration_us

@@ -7,7 +7,7 @@
 
 use heddle::config::{ModelCost, PolicyConfig, SimConfig};
 use heddle::predictor::history_workload;
-use heddle::sim::simulate;
+use heddle::harness::Run;
 use heddle::util::cli::Args;
 use heddle::workload::{generate, Domain, WorkloadConfig};
 
@@ -40,7 +40,10 @@ fn main() {
                 cfg.model = model.clone();
                 cfg.policy = policy;
                 cfg.seed = seed;
-                let r = simulate(&cfg, &history, &specs);
+                let r = Run::new(&cfg, &history, &specs)
+                    .exec()
+                    .expect("plain rollout cannot fail")
+                    .report;
                 rows.push((name, r.throughput(), r.makespan));
             }
             let heddle_tp = rows[0].1;

@@ -78,7 +78,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nserve mini-run: {} trajectories, {} tokens in {:.2}s \
          ({:.0} tok/s end-to-end)",
-        out.report.trajectories.len(),
+        out.report().trajectories.len(),
         out.tokens_generated,
         out.wall_seconds,
         out.throughput()

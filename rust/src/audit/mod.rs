@@ -73,7 +73,14 @@
 //! canonical rendering of the orchestration decisions; it powers the
 //! differential check ([`diff_decisions`]) that two runs (e.g. sim vs
 //! serve, or two same-seed sims) made the same decisions.
+//!
+//! 9. **Latency decomposition** — every trajectory's phase spans are
+//!    sorted, non-overlapping, gap-free, cover exactly
+//!    `[submit_time, finish_time]`, reconcile with the scalar metrics
+//!    (`queue_delay`/`gpu_time`/`tool_time`), and match the decision
+//!    events 1:1 ([`Auditor::check_spans`]).
 
+use crate::metrics::{PhaseKind, RolloutReport};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -960,6 +967,223 @@ impl Auditor {
                 t,
                 format!("worker {w}: {b} KV bytes leaked at drain"),
             );
+        }
+    }
+
+    /// Invariant 9 (latency decomposition): cross-check the phase-span
+    /// telemetry against both the scalar metrics and the decision-event
+    /// stream. For every trajectory the spans must be sorted,
+    /// non-overlapping and gap-free (within `eps`), cover exactly
+    /// `[submit_time, finish_time]`, and reconcile with the Formula-1
+    /// terms: Queue+Preempted == `queue_delay`, ToolWait == `tool_time`,
+    /// and Prefill+Decode == `gpu_time`. Pass `gpu_exact = false` for
+    /// the wall-clock serving path, where on-worker spans are observed
+    /// at polling granularity and so bound `gpu_time` from above rather
+    /// than equalling it. When this auditor recorded an event stream,
+    /// span counts are also checked 1:1 against it: Queue spans vs
+    /// `enqueued`, Preempted vs `preempted`, ToolWait vs `tool_wait`,
+    /// and on-worker residencies vs `admitted`.
+    ///
+    /// Trajectories are matched positionally: `report.trajectories[i]`
+    /// is audit trajectory `i` (both sides index in submission order).
+    pub fn check_spans(
+        &mut self,
+        report: &RolloutReport,
+        eps: f64,
+        gpu_exact: bool,
+    ) {
+        self.seq += 1;
+        // Decision-event counts per trajectory:
+        // [enqueued, admitted, preempted, tool_wait].
+        let mut ev_counts: BTreeMap<usize, [usize; 4]> = BTreeMap::new();
+        for r in &self.events {
+            let slot = match r.ev {
+                AuditEvent::Enqueued { traj, .. } => Some((traj, 0)),
+                AuditEvent::Admitted { traj, .. } => Some((traj, 1)),
+                AuditEvent::Preempted { traj, .. } => Some((traj, 2)),
+                AuditEvent::ToolWait { traj, .. } => Some((traj, 3)),
+                _ => None,
+            };
+            if let Some((traj, k)) = slot {
+                ev_counts.entry(traj).or_default()[k] += 1;
+            }
+        }
+        let have_events = !self.events.is_empty();
+        for (i, tm) in report.trajectories.iter().enumerate() {
+            let t = tm.finish_time;
+            if tm.open_span.is_some() {
+                self.violate(
+                    t,
+                    format!("span: traj {i}: span left open at drain"),
+                );
+            }
+            if tm.spans.is_empty() {
+                self.violate(t, format!("span: traj {i}: no spans recorded"));
+                continue;
+            }
+            let first = tm.spans.first().unwrap();
+            let last = tm.spans.last().unwrap();
+            if (first.start - tm.submit_time).abs() > eps {
+                self.violate(
+                    t,
+                    format!(
+                        "span: traj {i}: first span starts at {} != \
+                         submit_time {}",
+                        first.start, tm.submit_time
+                    ),
+                );
+            }
+            if (last.end - tm.finish_time).abs() > eps {
+                self.violate(
+                    t,
+                    format!(
+                        "span: traj {i}: last span ends at {} != \
+                         finish_time {}",
+                        last.end, tm.finish_time
+                    ),
+                );
+            }
+            let mut sum = 0.0;
+            for (j, s) in tm.spans.iter().enumerate() {
+                if s.end < s.start - eps {
+                    self.violate(
+                        t,
+                        format!(
+                            "span: traj {i}: span {j} ({}) runs backwards \
+                             ({} -> {})",
+                            s.kind.name(),
+                            s.start,
+                            s.end
+                        ),
+                    );
+                }
+                sum += s.end - s.start;
+                if j + 1 < tm.spans.len() {
+                    let gap = tm.spans[j + 1].start - s.end;
+                    if gap.abs() > eps {
+                        self.violate(
+                            t,
+                            format!(
+                                "span: traj {i}: {} between span {j} ({}) \
+                                 and span {} ({})",
+                                if gap > 0.0 {
+                                    format!("gap of {gap}")
+                                } else {
+                                    format!("overlap of {}", -gap)
+                                },
+                                s.kind.name(),
+                                j + 1,
+                                tm.spans[j + 1].kind.name()
+                            ),
+                        );
+                    }
+                }
+            }
+            if (sum - tm.completion_time()).abs() > eps {
+                self.violate(
+                    t,
+                    format!(
+                        "span: traj {i}: spans sum to {sum} != \
+                         completion_time {}",
+                        tm.completion_time()
+                    ),
+                );
+            }
+            let queue = tm.phase_time(PhaseKind::Queue)
+                + tm.phase_time(PhaseKind::Preempted);
+            if (queue - tm.queue_delay).abs() > eps {
+                self.violate(
+                    t,
+                    format!(
+                        "span: traj {i}: queue+preempted spans {queue} != \
+                         queue_delay {}",
+                        tm.queue_delay
+                    ),
+                );
+            }
+            let tool = tm.phase_time(PhaseKind::ToolWait);
+            if (tool - tm.tool_time).abs() > eps {
+                self.violate(
+                    t,
+                    format!(
+                        "span: traj {i}: tool_wait spans {tool} != \
+                         tool_time {}",
+                        tm.tool_time
+                    ),
+                );
+            }
+            let gpu = tm.phase_time(PhaseKind::Prefill)
+                + tm.phase_time(PhaseKind::Decode);
+            if gpu_exact {
+                if (gpu - tm.gpu_time).abs() > eps {
+                    self.violate(
+                        t,
+                        format!(
+                            "span: traj {i}: prefill+decode spans {gpu} != \
+                             gpu_time {}",
+                            tm.gpu_time
+                        ),
+                    );
+                }
+            } else if tm.gpu_time > gpu + eps {
+                self.violate(
+                    t,
+                    format!(
+                        "span: traj {i}: gpu_time {} exceeds on-worker \
+                         span time {gpu}",
+                        tm.gpu_time
+                    ),
+                );
+            }
+            if have_events {
+                let c = ev_counts.get(&i).copied().unwrap_or_default();
+                let count = |k: PhaseKind| {
+                    tm.spans.iter().filter(|s| s.kind == k).count()
+                };
+                // One on-worker residency per Admitted event: a Prefill
+                // span always opens one; a Decode span opens one only
+                // when it is not the continuation of a Prefill.
+                let residencies = tm
+                    .spans
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, s)| match s.kind {
+                        PhaseKind::Prefill => true,
+                        PhaseKind::Decode => {
+                            *j == 0
+                                || tm.spans[j - 1].kind != PhaseKind::Prefill
+                        }
+                        _ => false,
+                    })
+                    .count();
+                let pairs = [
+                    (count(PhaseKind::Queue), c[0], "queue spans", "enqueued"),
+                    (residencies, c[1], "on-worker residencies", "admitted"),
+                    (
+                        count(PhaseKind::Preempted),
+                        c[2],
+                        "preempted spans",
+                        "preempted",
+                    ),
+                    (
+                        count(PhaseKind::ToolWait),
+                        c[3],
+                        "tool-wait spans",
+                        "tool_wait",
+                    ),
+                ];
+                for (got, want, what, ev) in pairs {
+                    if got != want {
+                        self.violate(
+                            t,
+                            format!(
+                                "span: traj {i}: {got} {what} but {want} \
+                                 `{ev}` events"
+                            ),
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -198,6 +198,26 @@ impl FaultStats {
             self.failed,
         )
     }
+
+    /// Serialize to the stable report schema (counter names match the
+    /// struct fields; `injected` is the derived total).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let n = |v: usize| Json::Num(v as f64);
+        Json::obj([
+            ("injected", n(self.injected())),
+            ("tool_failures", n(self.tool_failures)),
+            ("tool_hangs", n(self.tool_hangs)),
+            ("worker_crashes", n(self.worker_crashes)),
+            ("stragglers", n(self.stragglers)),
+            ("cold_spikes", n(self.cold_spikes)),
+            ("retries", n(self.retries)),
+            ("retry_exhausted", n(self.retry_exhausted)),
+            ("displaced", n(self.displaced)),
+            ("recovered", n(self.recovered)),
+            ("failed", n(self.failed)),
+        ])
+    }
 }
 
 /// Deterministic fault oracle for one run. Per-worker faults (crash

@@ -17,7 +17,7 @@ use crate::predictor::{
     build_predictor, history_workload, Observation,
 };
 use crate::config::PredictorKind;
-use crate::sim::simulate;
+use crate::harness::Run;
 use crate::util::stats;
 use crate::workload::{generate, Domain, TrajectorySpec, WorkloadConfig};
 use std::time::Instant;
@@ -57,7 +57,10 @@ fn sim_cfg(p: &FigParams, model: ModelCost, policy: PolicyConfig) -> SimConfig {
 fn run(p: &FigParams, domain: Domain, model: ModelCost, policy: PolicyConfig) -> RolloutReport {
     let specs = generate(&WorkloadConfig::new(domain, p.prompts, p.seed));
     let history = history_workload(domain, p.seed);
-    simulate(&sim_cfg(p, model, policy), &history, &specs)
+    Run::new(&sim_cfg(p, model, policy), &history, &specs)
+        .exec()
+        .expect("plain rollout cannot fail")
+        .report
 }
 
 // ---------------------------------------------------------------------------
@@ -229,11 +232,14 @@ pub fn fig12(p: &FigParams, models: &[ModelCost]) -> Vec<Fig12Row> {
             ];
             let mut tps = Vec::new();
             for (name, policy) in systems {
-                let r = simulate(
+                let r = Run::new(
                     &sim_cfg(p, model.clone(), policy),
                     &history,
                     &specs,
-                );
+                )
+                .exec()
+                .expect("plain rollout cannot fail")
+                .report;
                 tps.push((name, r.throughput()));
             }
             let best_base =
@@ -453,11 +459,14 @@ pub fn table1(p: &FigParams) -> Vec<Table1Row> {
             }
             let prediction = t0.elapsed().as_secs_f64() / k.max(1) as f64;
             // Migration: measured mean transfer time from a Heddle run.
-            let r = simulate(
+            let r = Run::new(
                 &sim_cfg(p, model.clone(), PolicyConfig::heddle()),
                 &history,
                 &specs,
-            );
+            )
+            .exec()
+            .expect("plain rollout cannot fail")
+            .report;
             let mig_times: Vec<f64> = r
                 .trajectories
                 .iter()

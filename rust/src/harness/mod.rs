@@ -1,0 +1,309 @@
+//! Unified run harness: one builder-style entry point for every way a
+//! rollout can be executed (plain, audited, fault-injected,
+//! determinism-checked), replacing the `simulate` / `simulate_audited`
+//! / `simulate_chaos` triple and the CLI's mode if-ladder.
+//!
+//! ```no_run
+//! use heddle::config::SimConfig;
+//! use heddle::harness::Run;
+//! # let cfg = SimConfig::default();
+//! # let history = vec![];
+//! # let specs = vec![];
+//! let out = Run::new(&cfg, &history, &specs)
+//!     .audit()
+//!     .faults(3)
+//!     .determinism_check()
+//!     .exec()
+//!     .unwrap();
+//! println!("{}", out.summary("chaos"));
+//! ```
+//!
+//! `exec` enforces the mode's own invariants: a fault-injected run must
+//! leave the auditor clean, and a determinism check must produce
+//! byte-identical decision traces across two same-seed runs. Both
+//! failures surface as `Err`, not prints, so callers (CLI, tests, CI)
+//! share one error path.
+
+use crate::audit::{diff_decisions, Auditor};
+use crate::config::SimConfig;
+use crate::fault::FaultStats;
+use crate::metrics::RolloutReport;
+use crate::sim::Simulator;
+use crate::util::json::Json;
+use crate::workload::TrajectorySpec;
+
+/// Builder for one rollout execution. Constructed with the base
+/// configuration; modes are layered on with [`Run::audit`],
+/// [`Run::faults`], and [`Run::determinism_check`].
+#[derive(Debug, Clone)]
+pub struct Run {
+    cfg: SimConfig,
+    history: Vec<TrajectorySpec>,
+    specs: Vec<TrajectorySpec>,
+    audit: bool,
+    determinism: bool,
+}
+
+/// Everything a rollout execution produces, whatever the mode.
+#[derive(Debug)]
+pub struct RunOutput {
+    pub report: RolloutReport,
+    /// The lifecycle auditor, when one was attached (explicit
+    /// [`Run::audit`], fault injection, or a determinism check).
+    pub audit: Option<Auditor>,
+    /// Fault/recovery counters (all zero when faults were disabled).
+    pub faults: FaultStats,
+    /// Whether a fault plan was armed (distinguishes "no faults drawn"
+    /// from "fault injection off" — CI greps for `injected=0`).
+    pub faults_enabled: bool,
+    /// Number of decisions verified identical across the two runs of a
+    /// determinism check (`None` when no check ran).
+    pub determinism_decisions: Option<usize>,
+}
+
+impl Run {
+    pub fn new(
+        cfg: &SimConfig,
+        history: &[TrajectorySpec],
+        specs: &[TrajectorySpec],
+    ) -> Self {
+        Run {
+            cfg: cfg.clone(),
+            history: history.to_vec(),
+            specs: specs.to_vec(),
+            audit: false,
+            determinism: false,
+        }
+    }
+
+    /// Attach the lifecycle auditor and return it in the output.
+    pub fn audit(mut self) -> Self {
+        self.audit = true;
+        self
+    }
+
+    /// Arm the fault plan with `seed`. Implies auditing: a chaos run
+    /// that violates lifecycle invariants fails `exec`.
+    pub fn faults(mut self, seed: u64) -> Self {
+        self.cfg.fault.enabled = true;
+        self.cfg.fault.seed = seed;
+        self
+    }
+
+    /// Run twice and require byte-identical decision traces (the
+    /// same-seed differential gate; covers the fault path when
+    /// [`Run::faults`] is also set).
+    pub fn determinism_check(mut self) -> Self {
+        self.determinism = true;
+        self
+    }
+
+    fn exec_once(
+        &self,
+        audited: bool,
+    ) -> (RolloutReport, Option<Auditor>, FaultStats) {
+        let mut sim = Simulator::new(&self.cfg, &self.history, &self.specs);
+        if audited {
+            sim.enable_audit();
+        }
+        sim.run_parts()
+    }
+
+    /// Execute the rollout under the configured modes.
+    pub fn exec(self) -> anyhow::Result<RunOutput> {
+        let audited =
+            self.audit || self.determinism || self.cfg.fault.enabled;
+        let (report, audit, faults) = self.exec_once(audited);
+        let mut determinism_decisions = None;
+        if self.determinism {
+            let (_, second, _) = self.exec_once(true);
+            let a = audit.as_ref().expect("auditor attached above");
+            let b = second.as_ref().expect("auditor attached above");
+            let diff = diff_decisions(a, b);
+            anyhow::ensure!(
+                diff.is_empty(),
+                "determinism check failed: {} divergent decisions \
+                 (first: {:?})",
+                diff.len(),
+                diff.first()
+            );
+            determinism_decisions = Some(a.decision_trace().len());
+        }
+        if let Some(a) = audit.as_ref() {
+            if self.cfg.fault.enabled {
+                anyhow::ensure!(
+                    a.ok(),
+                    "fault-injection run violated lifecycle invariants:\n{}",
+                    a.report_violations()
+                );
+            } else if self.determinism {
+                anyhow::ensure!(a.ok(), "{}", a.report_violations());
+            }
+        }
+        Ok(RunOutput {
+            report,
+            audit,
+            faults,
+            faults_enabled: self.cfg.fault.enabled,
+            determinism_decisions,
+        })
+    }
+}
+
+impl RunOutput {
+    /// The shared one-stop human-readable result surface: rollout
+    /// summary line, plus fault counters when a plan was armed, plus
+    /// the determinism verdict when a check ran.
+    pub fn summary(&self, label: &str) -> String {
+        let mut s = self.report.summary(label);
+        if self.faults_enabled {
+            s.push('\n');
+            s.push_str(&self.faults.summary());
+        }
+        if let Some(n) = self.determinism_decisions {
+            s.push('\n');
+            s.push_str(&format!(
+                "determinism check: {n} decisions identical across \
+                 same-seed runs"
+            ));
+        }
+        s
+    }
+
+    /// Serialize to the stable report schema (schema_version 1; see
+    /// ROADMAP "Telemetry & JSON report schema").
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("schema_version", Json::Num(1.0)),
+            ("report", self.report.to_json()),
+            ("faults_enabled", Json::Bool(self.faults_enabled)),
+            ("faults", self.faults.to_json()),
+            (
+                "audit",
+                match &self.audit {
+                    Some(a) => Json::obj([
+                        ("events", Json::Num(a.n_events() as f64)),
+                        (
+                            "violations",
+                            Json::Num(a.violations().len() as f64),
+                        ),
+                        ("ok", Json::Bool(a.ok())),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "determinism_decisions",
+                match self.determinism_decisions {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyConfig;
+    use crate::predictor::history_workload;
+    use crate::workload::{generate, Domain, WorkloadConfig};
+
+    fn setup(seed: u64) -> (SimConfig, Vec<TrajectorySpec>, Vec<TrajectorySpec>) {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.n_gpus = 4;
+        cfg.policy = PolicyConfig::heddle();
+        cfg.seed = seed;
+        let history = history_workload(Domain::Coding, seed);
+        let specs =
+            generate(&WorkloadConfig::new(Domain::Coding, 2, seed));
+        (cfg, history, specs)
+    }
+
+    #[test]
+    fn plain_run_matches_deprecated_shim() {
+        let (cfg, history, specs) = setup(11);
+        let out = Run::new(&cfg, &history, &specs).exec().unwrap();
+        #[allow(deprecated)]
+        let old = crate::sim::simulate(&cfg, &history, &specs);
+        assert_eq!(out.report.makespan, old.makespan);
+        assert_eq!(out.report.total_tokens, old.total_tokens);
+        assert!(out.audit.is_none() || out.audit.as_ref().unwrap().ok());
+        assert!(!out.faults_enabled);
+        assert_eq!(out.faults.injected(), 0);
+    }
+
+    #[test]
+    fn audit_mode_returns_clean_auditor() {
+        let (cfg, history, specs) = setup(12);
+        let out =
+            Run::new(&cfg, &history, &specs).audit().exec().unwrap();
+        let a = out.audit.expect("auditor requested");
+        assert!(a.ok(), "{}", a.report_violations());
+        assert!(a.n_events() > 0);
+    }
+
+    #[test]
+    fn chaos_with_determinism_check_passes() {
+        let (cfg, history, specs) = setup(13);
+        let out = Run::new(&cfg, &history, &specs)
+            .audit()
+            .faults(2)
+            .determinism_check()
+            .exec()
+            .unwrap();
+        assert!(out.faults_enabled);
+        assert!(out.determinism_decisions.unwrap() > 0);
+        assert!(out.summary("chaos").contains("faults: injected="));
+        assert!(out.summary("chaos").contains("determinism check:"));
+    }
+
+    #[test]
+    fn output_json_has_stable_top_level_schema() {
+        let (cfg, history, specs) = setup(14);
+        let out = Run::new(&cfg, &history, &specs)
+            .audit()
+            .exec()
+            .unwrap();
+        let j = out.to_json();
+        assert_eq!(
+            j.get("schema_version").unwrap().as_i64().unwrap(),
+            1
+        );
+        let report = j.get("report").unwrap();
+        for key in [
+            "makespan_s",
+            "throughput_tok_s",
+            "total_tokens",
+            "n_trajectories",
+            "tail_ratio",
+            "mean_queue_delay_s",
+            "totals",
+            "formula1",
+            "phases",
+            "tail",
+        ] {
+            assert!(report.opt(key).is_some(), "missing report.{key}");
+        }
+        for phase in [
+            "queue",
+            "prefill",
+            "decode",
+            "tool_wait",
+            "migration_wait",
+            "preempted",
+        ] {
+            let p = report.get("phases").unwrap().get(phase).unwrap();
+            for stat in ["total_s", "mean_s", "p50_s", "p99_s"] {
+                assert!(
+                    p.opt(stat).is_some(),
+                    "missing phases.{phase}.{stat}"
+                );
+            }
+        }
+        // Round-trips through the parser.
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+}

@@ -19,6 +19,7 @@ pub mod config;
 pub mod coordinator;
 pub mod fault;
 pub mod figures;
+pub mod harness;
 pub mod metrics;
 pub mod model;
 pub mod predictor;

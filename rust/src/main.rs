@@ -3,19 +3,26 @@
 //! Subcommands:
 //!   serve      run a real-model rollout batch through the full stack
 //!   simulate   run the paper-scale cluster simulation (one policy)
+//!   bench      sweep all four policies x seeds, write BENCH_rollout.json
 //!   train      run the GRPO outer loop (rollout+inference+training)
 //!   profile    profile the PJRT decode path, print interference table
 //!   bench-figN / bench-tableN / bench-ablation   regenerate results
 //!
-//! Flags go AFTER positional args: `heddle simulate --gpus 64 --prompts 400`.
+//! Flag grammar: flags go AFTER positional args
+//! (`heddle simulate --gpus 64 --prompts 400`); `--key value` pairs
+//! consume the next token, bare `--flag` switches do not. Every rollout
+//! subcommand accepts `--report-json <path>` to additionally serialize
+//! its result to the stable JSON report schema (schema_version 1; see
+//! ROADMAP "Telemetry & JSON report schema").
 
 #![allow(clippy::field_reassign_with_default)]
 
 use heddle::config::{ModelCost, PolicyConfig, SimConfig};
 use heddle::figures as figs;
+use heddle::harness::Run;
 use heddle::predictor::history_workload;
-use heddle::sim::simulate;
 use heddle::util::cli::Args;
+use heddle::util::json::Json;
 use heddle::workload::{generate, Domain, WorkloadConfig};
 use std::path::Path;
 
@@ -34,6 +41,15 @@ fn write_audit(
     );
     if !audit.ok() {
         println!("{}", audit.report_violations());
+    }
+    Ok(())
+}
+
+/// Write `doc` to `--report-json <path>` when the flag is present.
+fn write_report_json(args: &Args, doc: &Json) -> anyhow::Result<()> {
+    if let Some(path) = args.get("report-json") {
+        std::fs::write(path, doc.to_pretty())?;
+        println!("report: wrote {path}");
     }
     Ok(())
 }
@@ -79,21 +95,19 @@ fn main() -> anyhow::Result<()> {
             let history = history_workload(domain, params.seed);
             let out =
                 heddle::serve::serve_rollout(&engine, &cfg, &history, &specs)?;
-            println!("{}", out.report.summary("serve"));
+            println!("{}", out.run.summary("serve"));
             println!(
                 "wall={:.2}s tokens={} throughput={:.1} tok/s",
                 out.wall_seconds,
                 out.tokens_generated,
                 out.throughput()
             );
-            if cfg.fault.enabled {
-                println!("{}", out.faults.summary());
-            }
             if args.flag("audit") {
-                if let Some(a) = &out.audit {
+                if let Some(a) = &out.run.audit {
                     write_audit(&args, a)?;
                 }
             }
+            write_report_json(&args, &out.run.to_json())?;
         }
         "simulate" => {
             let model = ModelCost::by_name(args.get_or("model", "qwen3-14b"))
@@ -110,11 +124,6 @@ fn main() -> anyhow::Result<()> {
             cfg.model = model;
             cfg.policy = policy;
             cfg.seed = params.seed;
-            if args.flag("faults") {
-                cfg.fault.enabled = true;
-                cfg.fault.seed =
-                    args.get_u64("fault-seed", cfg.fault.seed);
-            }
             let specs = generate(&WorkloadConfig::new(
                 domain,
                 params.prompts,
@@ -122,56 +131,100 @@ fn main() -> anyhow::Result<()> {
             ));
             let history = history_workload(domain, params.seed);
             let label = args.get_or("policy", "heddle").to_string();
-            if args.flag("determinism-check") {
-                // Differential gate: two same-seed runs (fault plan
-                // included) must make byte-identical decisions.
-                let (r, a, stats) =
-                    heddle::sim::simulate_chaos(&cfg, &history, &specs);
-                let (_, b, _) =
-                    heddle::sim::simulate_chaos(&cfg, &history, &specs);
-                println!("{}", r.summary(&label));
-                if cfg.fault.enabled {
-                    println!("{}", stats.summary());
-                }
-                if args.flag("audit") {
-                    write_audit(&args, &a)?;
-                }
-                let diff = heddle::audit::diff_decisions(&a, &b);
-                anyhow::ensure!(
-                    diff.is_empty(),
-                    "determinism check failed: {} divergent decisions \
-                     (first: {:?})",
-                    diff.len(),
-                    diff.first()
-                );
-                println!(
-                    "determinism check: {} decisions identical across \
-                     same-seed runs",
-                    a.decision_trace().len()
-                );
-                anyhow::ensure!(a.ok(), "{}", a.report_violations());
-            } else if cfg.fault.enabled {
-                let (r, audit, stats) =
-                    heddle::sim::simulate_chaos(&cfg, &history, &specs);
-                println!("{}", r.summary(&label));
-                println!("{}", stats.summary());
-                if args.flag("audit") {
-                    write_audit(&args, &audit)?;
-                }
-                anyhow::ensure!(
-                    audit.ok(),
-                    "fault-injection run violated lifecycle invariants:\n{}",
-                    audit.report_violations()
-                );
-            } else if args.flag("audit") {
-                let (r, audit) =
-                    heddle::sim::simulate_audited(&cfg, &history, &specs);
-                println!("{}", r.summary(&label));
-                write_audit(&args, &audit)?;
-            } else {
-                let r = simulate(&cfg, &history, &specs);
-                println!("{}", r.summary(&label));
+            // Modes stack: every combination of --audit, --faults, and
+            // --determinism-check is one builder chain (the harness
+            // enforces each mode's invariants in `exec`).
+            let mut run = Run::new(&cfg, &history, &specs);
+            if args.flag("audit") {
+                run = run.audit();
             }
+            if args.flag("faults") {
+                run = run.faults(args.get_u64("fault-seed", cfg.fault.seed));
+            }
+            if args.flag("determinism-check") {
+                run = run.determinism_check();
+            }
+            let out = run.exec()?;
+            println!("{}", out.summary(&label));
+            if args.flag("audit") {
+                if let Some(a) = &out.audit {
+                    write_audit(&args, a)?;
+                }
+            }
+            write_report_json(&args, &out.to_json())?;
+        }
+        "bench" => {
+            // Sweep all four policies over `--seeds` consecutive seeds
+            // and write the machine-readable perf trajectory. Default
+            // output path is the repo's benchmark artifact.
+            let model = ModelCost::by_name(args.get_or("model", "qwen3-14b"))
+                .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+            let domain = Domain::parse(args.get_or("domain", "coding"))
+                .ok_or_else(|| anyhow::anyhow!("bad domain"))?;
+            let n_seeds = args.get_usize("seeds", 3).max(1);
+            let mut runs = Vec::new();
+            for policy_name in ["heddle", "verl", "verl*", "slime"] {
+                let policy =
+                    PolicyConfig::by_name(policy_name, model.min_mp)
+                        .expect("known policy name");
+                for s in 0..n_seeds as u64 {
+                    let seed = params.seed + s;
+                    let mut cfg = SimConfig::default();
+                    cfg.cluster.n_gpus = params.gpus;
+                    cfg.model = model.clone();
+                    cfg.policy = policy;
+                    cfg.seed = seed;
+                    let specs = generate(&WorkloadConfig::new(
+                        domain,
+                        params.prompts,
+                        seed,
+                    ));
+                    let history = history_workload(domain, seed);
+                    let mut run = Run::new(&cfg, &history, &specs).audit();
+                    if args.flag("faults") {
+                        run = run.faults(args.get_u64("fault-seed", seed));
+                    }
+                    let out = run.exec()?;
+                    println!(
+                        "{}",
+                        out.summary(&format!("{policy_name} seed={seed}"))
+                    );
+                    runs.push(Json::obj([
+                        ("policy", Json::Str(policy_name.to_string())),
+                        ("seed", Json::Num(seed as f64)),
+                        ("report", out.report.to_json()),
+                        ("faults_enabled", Json::Bool(out.faults_enabled)),
+                        ("faults", out.faults.to_json()),
+                        (
+                            "audit_ok",
+                            match &out.audit {
+                                Some(a) => Json::Bool(a.ok()),
+                                None => Json::Null,
+                            },
+                        ),
+                    ]));
+                }
+            }
+            let n_runs = runs.len();
+            let doc = Json::obj([
+                ("schema_version", Json::Num(1.0)),
+                ("generator", Json::Str("heddle bench".to_string())),
+                (
+                    "params",
+                    Json::obj([
+                        ("gpus", Json::Num(params.gpus as f64)),
+                        ("prompts", Json::Num(params.prompts as f64)),
+                        ("seed", Json::Num(params.seed as f64)),
+                        ("seeds", Json::Num(n_seeds as f64)),
+                        ("domain", Json::Str(domain.name().to_string())),
+                        ("model", Json::Str(model.name.clone())),
+                    ]),
+                ),
+                ("runs", Json::Arr(runs)),
+            ]);
+            let path = args.get_or("report-json", "BENCH_rollout.json");
+            std::fs::write(path, doc.to_pretty())?;
+            println!("bench: wrote {n_runs} runs -> {path}");
         }
         "train" => {
             let mut cfg = SimConfig::default();
@@ -198,6 +251,34 @@ fn main() -> anyhow::Result<()> {
                     s.mean_abs_advantage
                 );
             }
+            let doc = Json::obj([
+                ("schema_version", Json::Num(1.0)),
+                ("generator", Json::Str("heddle train".to_string())),
+                (
+                    "steps",
+                    Json::Arr(
+                        steps
+                            .iter()
+                            .map(|s| {
+                                Json::obj([
+                                    ("step", Json::Num(s.step as f64)),
+                                    (
+                                        "inference_s",
+                                        Json::Num(s.inference_s),
+                                    ),
+                                    ("training_s", Json::Num(s.training_s)),
+                                    (
+                                        "mean_abs_advantage",
+                                        Json::Num(s.mean_abs_advantage),
+                                    ),
+                                    ("report", s.rollout.to_json()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]);
+            write_report_json(&args, &doc)?;
         }
         "profile" => {
             let engine = heddle::runtime::Engine::load(Path::new(
@@ -302,14 +383,22 @@ fn main() -> anyhow::Result<()> {
         }
         _ => {
             println!(
-                "usage: heddle <serve|simulate|train|profile|bench-fig2|\
-                 bench-fig4|bench-fig5|bench-fig6|bench-fig7|bench-fig12|\
-                 bench-fig13|bench-fig14|bench-fig15|bench-fig16|\
-                 bench-table1|bench-table2|bench-ablation>\n\
-                 flags: --gpus N --prompts N --seed N --model qwen3-14b \
-                 --policy heddle|verl|verl*|slime --domain coding|search|math \
-                 --audit-out FILE --fault-seed N --audit --faults \
-                 --determinism-check"
+                "usage: heddle <serve|simulate|bench|train|profile|\
+                 bench-fig2|bench-fig4|bench-fig5|bench-fig6|bench-fig7|\
+                 bench-fig12|bench-fig13|bench-fig14|bench-fig15|\
+                 bench-fig16|bench-table1|bench-table2|bench-ablation>\n\
+                 flag grammar: flags come AFTER the subcommand; \
+                 `--key value` consumes the next token, bare switches \
+                 don't.\n\
+                 common: --gpus N --prompts N --seed N --model \
+                 qwen3-8b|qwen3-14b|qwen3-32b|mini --policy \
+                 heddle|verl|verl*|slime --domain coding|search|math\n\
+                 modes (stackable): --audit [--audit-out FILE] --faults \
+                 [--fault-seed N] --determinism-check\n\
+                 reporting: --report-json FILE (stable schema_version 1)\n\
+                 bench: --seeds N (consecutive seeds per policy; default \
+                 3) writes BENCH_rollout.json unless --report-json is \
+                 given"
             );
         }
     }

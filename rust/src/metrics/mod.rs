@@ -3,7 +3,69 @@
 //! queueing delay, generation time, and tool time — plus cluster-level
 //! throughput. Both the simulator and the real serving path emit these.
 
+use crate::util::json::Json;
 use crate::util::stats;
+
+/// Lifecycle phase of a trajectory, as seen by the span telemetry.
+///
+/// Every instant between `submit_time` and `finish_time` belongs to
+/// exactly one phase; the per-trajectory `spans` vector partitions the
+/// completion time (the auditor's `check_spans` enforces this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PhaseKind {
+    /// Waiting in the scheduler queue for admission (initial submit,
+    /// post-tool re-queue, or post-crash displacement).
+    Queue,
+    /// On a worker, consuming prompt/tool-output prefill tokens.
+    Prefill,
+    /// On a worker, generating tokens.
+    Decode,
+    /// Blocked on a tool invocation (includes retry backoff).
+    ToolWait,
+    /// Tool finished but a KV transfer is still in flight
+    /// (simulator-only: the serving path migrates synchronously
+    /// inside the tool window).
+    MigrationWait,
+    /// Preempted and parked off-worker, waiting for re-admission.
+    Preempted,
+}
+
+impl PhaseKind {
+    pub const ALL: [PhaseKind; 6] = [
+        PhaseKind::Queue,
+        PhaseKind::Prefill,
+        PhaseKind::Decode,
+        PhaseKind::ToolWait,
+        PhaseKind::MigrationWait,
+        PhaseKind::Preempted,
+    ];
+
+    /// Stable lower-case name used as the JSON key for this phase.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PhaseKind::Queue => "queue",
+            PhaseKind::Prefill => "prefill",
+            PhaseKind::Decode => "decode",
+            PhaseKind::ToolWait => "tool_wait",
+            PhaseKind::MigrationWait => "migration_wait",
+            PhaseKind::Preempted => "preempted",
+        }
+    }
+}
+
+/// One contiguous interval a trajectory spent in a single phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub kind: PhaseKind,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Span {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
 
 /// Per-trajectory record, filled in as the trajectory executes.
 #[derive(Debug, Clone, Default)]
@@ -27,12 +89,62 @@ pub struct TrajectoryMetrics {
     pub preemptions: usize,
     /// Prefill tokens recomputed due to cache misses (placement quality).
     pub recomputed_tokens: usize,
+    /// Closed phase spans, in time order; together they partition
+    /// `[submit_time, finish_time]`.
+    pub spans: Vec<Span>,
+    /// The currently open span, if any — internal to the emitters; all
+    /// spans are closed by the time a rollout returns.
+    pub open_span: Option<(PhaseKind, f64)>,
+    /// GPU seconds this trajectory's tokens would have cost at batch=1
+    /// on a healthy worker; `gpu_time - ideal_gpu_time` is the paper's
+    /// interference + straggler inflation term.
+    pub ideal_gpu_time: f64,
 }
 
 impl TrajectoryMetrics {
     pub fn completion_time(&self) -> f64 {
         self.finish_time - self.submit_time
     }
+
+    /// Close any open span at `t`, then open a new one of `kind`.
+    pub fn span_begin(&mut self, kind: PhaseKind, t: f64) {
+        self.span_close(t);
+        self.open_span = Some((kind, t));
+    }
+
+    /// Close the open span (if any) at `t`. Zero-length spans are kept:
+    /// they still count one phase *visit* for the auditor's event
+    /// cross-checks.
+    pub fn span_close(&mut self, t: f64) {
+        if let Some((kind, start)) = self.open_span.take() {
+            self.spans.push(Span { kind, start, end: t });
+        }
+    }
+
+    /// Total seconds spent in `kind` across all spans.
+    pub fn phase_time(&self, kind: PhaseKind) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(Span::duration)
+            .sum()
+    }
+
+    /// `gpu_time` in excess of the healthy batch-1 ideal (>= 0).
+    pub fn interference_overhead(&self) -> f64 {
+        (self.gpu_time - self.ideal_gpu_time).max(0.0)
+    }
+}
+
+/// Aggregate distribution of one phase across a rollout's trajectories
+/// (per-trajectory phase sums; seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseStat {
+    pub kind: PhaseKind,
+    pub total: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
 }
 
 /// Aggregated rollout metrics for one batch (one RL step's rollout phase).
@@ -85,16 +197,17 @@ impl RolloutReport {
         self.trajectories.iter().map(|t| t.completion_time()).collect()
     }
 
+    /// The trajectory with the longest completion time (NaN-safe).
+    pub fn longest_trajectory(&self) -> Option<&TrajectoryMetrics> {
+        self.trajectories
+            .iter()
+            .max_by(|a, b| a.completion_time().total_cmp(&b.completion_time()))
+    }
+
     /// Queueing delay of the trajectory with the longest completion time
     /// (the paper's Fig. 14 right panel).
     pub fn longest_trajectory_queue_delay(&self) -> f64 {
-        self.trajectories
-            .iter()
-            .max_by(|a, b| {
-                a.completion_time().partial_cmp(&b.completion_time()).unwrap()
-            })
-            .map(|t| t.queue_delay)
-            .unwrap_or(0.0)
+        self.longest_trajectory().map(|t| t.queue_delay).unwrap_or(0.0)
     }
 
     pub fn mean_queue_delay(&self) -> f64 {
@@ -107,6 +220,137 @@ impl RolloutReport {
     pub fn tail_ratio(&self) -> f64 {
         let ct = self.completion_times();
         stats::max(&ct) / stats::percentile(&ct, 0.5)
+    }
+
+    /// Per-phase distribution over the per-trajectory phase sums, one
+    /// entry per `PhaseKind` (in `PhaseKind::ALL` order).
+    pub fn phase_breakdown(&self) -> Vec<PhaseStat> {
+        PhaseKind::ALL
+            .iter()
+            .map(|&kind| {
+                let xs: Vec<f64> = self
+                    .trajectories
+                    .iter()
+                    .map(|t| t.phase_time(kind))
+                    .collect();
+                let (mean, p50, p99) = if xs.is_empty() {
+                    (0.0, 0.0, 0.0)
+                } else {
+                    (
+                        stats::mean(&xs),
+                        stats::percentile(&xs, 0.5),
+                        stats::percentile(&xs, 0.99),
+                    )
+                };
+                PhaseStat {
+                    kind,
+                    total: xs.iter().sum(),
+                    mean,
+                    p50,
+                    p99,
+                }
+            })
+            .collect()
+    }
+
+    /// Fig. 14-style tail attribution: the longest trajectory's
+    /// completion time and its per-phase decomposition.
+    pub fn tail_attribution(&self) -> Option<(f64, Vec<(PhaseKind, f64)>)> {
+        self.longest_trajectory().map(|t| {
+            (
+                t.completion_time(),
+                PhaseKind::ALL
+                    .iter()
+                    .map(|&k| (k, t.phase_time(k)))
+                    .collect(),
+            )
+        })
+    }
+
+    /// Total interference + straggler inflation across trajectories
+    /// (the Formula-1 overhead term; seconds).
+    pub fn interference_overhead(&self) -> f64 {
+        self.trajectories.iter().map(|t| t.interference_overhead()).sum()
+    }
+
+    /// Serialize the report to the stable JSON schema (schema_version 1;
+    /// see ROADMAP "Telemetry & JSON report schema"). Fields are only
+    /// ever added within a schema version, never renamed or removed.
+    pub fn to_json(&self) -> Json {
+        let sum = |f: fn(&TrajectoryMetrics) -> f64| -> f64 {
+            self.trajectories.iter().map(f).sum()
+        };
+        let mut phases = std::collections::BTreeMap::new();
+        for p in self.phase_breakdown() {
+            phases.insert(
+                p.kind.name().to_string(),
+                Json::obj([
+                    ("total_s", Json::Num(p.total)),
+                    ("mean_s", Json::Num(p.mean)),
+                    ("p50_s", Json::Num(p.p50)),
+                    ("p99_s", Json::Num(p.p99)),
+                ]),
+            );
+        }
+        let tail = match self.tail_attribution() {
+            Some((ct, per_phase)) => {
+                let mut m = std::collections::BTreeMap::new();
+                for (k, v) in per_phase {
+                    m.insert(k.name().to_string(), Json::Num(v));
+                }
+                Json::obj([
+                    ("completion_s", Json::Num(ct)),
+                    ("phases", Json::Obj(m)),
+                ])
+            }
+            None => Json::Null,
+        };
+        Json::obj([
+            ("makespan_s", Json::Num(self.makespan)),
+            ("throughput_tok_s", Json::Num(self.throughput())),
+            ("total_tokens", Json::Num(self.total_tokens as f64)),
+            (
+                "n_trajectories",
+                Json::Num(self.trajectories.len() as f64),
+            ),
+            ("tail_ratio", Json::Num(self.tail_ratio())),
+            ("mean_queue_delay_s", Json::Num(self.mean_queue_delay())),
+            (
+                "totals",
+                Json::obj([
+                    (
+                        "migrations",
+                        Json::Num(self.total_migrations as f64),
+                    ),
+                    (
+                        "preemptions",
+                        Json::Num(self.total_preemptions as f64),
+                    ),
+                    (
+                        "recomputed_tokens",
+                        Json::Num(self.total_recomputed_tokens as f64),
+                    ),
+                ]),
+            ),
+            (
+                "formula1",
+                Json::obj([
+                    ("queue_s", Json::Num(sum(|t| t.queue_delay))),
+                    ("gpu_s", Json::Num(sum(|t| t.gpu_time))),
+                    ("tool_s", Json::Num(sum(|t| t.tool_time))),
+                    (
+                        "ideal_gpu_s",
+                        Json::Num(sum(|t| t.ideal_gpu_time)),
+                    ),
+                    (
+                        "interference_overhead_s",
+                        Json::Num(self.interference_overhead()),
+                    ),
+                ]),
+            ),
+            ("phases", Json::Obj(phases)),
+            ("tail", tail),
+        ])
     }
 
     pub fn summary(&self, label: &str) -> String {

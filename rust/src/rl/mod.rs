@@ -6,9 +6,9 @@
 //! end-to-end benefit of faster rollouts.
 
 use crate::config::SimConfig;
+use crate::harness::Run;
 use crate::metrics::RolloutReport;
 use crate::predictor::history_workload;
-use crate::sim::simulate;
 use crate::util::rng::Rng;
 use crate::workload::{generate, Domain, TrajectorySpec, WorkloadConfig};
 
@@ -82,7 +82,10 @@ pub fn train(
         let wl =
             WorkloadConfig::new(domain, prompts, cfg.seed + 1000 + step as u64);
         let specs = generate(&wl);
-        let rollout = simulate(cfg, &history, &specs);
+        let rollout = Run::new(cfg, &history, &specs)
+            .exec()
+            .expect("plain rollout cannot fail")
+            .report;
         let adv = grpo_advantages(&specs, cfg.seed + step as u64);
         let mean_abs =
             adv.iter().map(|a| a.abs()).sum::<f64>() / adv.len().max(1) as f64;

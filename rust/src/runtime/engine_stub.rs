@@ -6,11 +6,16 @@
 //! `DecodeOut` are the same pure-Rust types, and `Engine` exposes the
 //! same methods — so the simulator, serving path, profiler, and tests
 //! all typecheck identically. Any attempt to actually *load* artifacts
-//! fails with a clear error; the simulation paths (which never touch the
-//! engine) are unaffected.
+//! fails with a clear error, but [`Engine::synthetic`] provides a fully
+//! functional in-memory engine: `decode_step` / `extend` / `predict`
+//! produce deterministic pseudo-logits and maintain real KV lengths, so
+//! the serving path (admission, prefill, decode, tool waits, migration)
+//! runs end-to-end without artifacts — that is what the no-`pjrt`
+//! sim-vs-serve telemetry tests drive.
 
 use super::manifest::Manifest;
-use anyhow::{bail, Result};
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
 use std::path::Path;
 
 /// One trajectory's host-resident KV cache: `[L, Hkv, S, D]` for K and V.
@@ -60,6 +65,47 @@ impl Engine {
         );
     }
 
+    /// A functional artifact-free engine over [`Manifest::synthetic`]:
+    /// deterministic pseudo-logits, real KV-length bookkeeping.
+    pub fn synthetic() -> Engine {
+        Engine { manifest: Manifest::synthetic() }
+    }
+
+    /// Deterministic pseudo-logits for one position: a pure function of
+    /// (token, position), so same-seed runs replay identically.
+    fn synth_logits(&self, token: i32, pos: usize) -> Vec<f32> {
+        let vocab = self.manifest.model.vocab;
+        let seed = (token as u64)
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            ^ (pos as u64).wrapping_mul(0xd1b54a32d192ed03)
+            ^ self.manifest.model.weight_seed;
+        let mut rng = Rng::new(seed);
+        (0..vocab).map(|_| (rng.f64() * 8.0 - 4.0) as f32).collect()
+    }
+
+    /// Append one token's K/V rows at the ring position `kv.len`.
+    fn kv_append(&self, kv: &mut TrajKv, token: i32) -> Result<()> {
+        let m = &self.manifest.model;
+        ensure!(
+            kv.len < m.max_seq,
+            "KV ring overflow: len {} at max_seq {}",
+            kv.len,
+            m.max_seq
+        );
+        let s = kv.len;
+        let val = (token as f32) / (m.vocab as f32);
+        for l in 0..m.n_layers {
+            for h in 0..m.n_kv_heads {
+                let off = ((l * m.n_kv_heads + h) * m.max_seq + s)
+                    * m.head_dim;
+                kv.k[off] = val;
+                kv.v[off] = -val;
+            }
+        }
+        kv.len += 1;
+        Ok(())
+    }
+
     pub fn new_kv(&self) -> TrajKv {
         TrajKv::empty(self.manifest.model.kv_floats_per_traj())
     }
@@ -82,26 +128,94 @@ impl Engine {
         0
     }
 
-    /// One decode step for up to `bucket` trajectories.
+    /// One decode step for up to `bucket` trajectories (synthetic:
+    /// appends each input token to its KV and returns pseudo-logits).
     pub fn decode_step(
         &self,
-        _entries: &mut [(i32, &mut TrajKv)],
+        entries: &mut [(i32, &mut TrajKv)],
     ) -> Result<DecodeOut> {
-        bail!("decode_step: pjrt feature disabled");
+        let vocab = self.manifest.model.vocab;
+        let mut logits = Vec::with_capacity(entries.len() * vocab);
+        for (token, kv) in entries.iter_mut() {
+            let pos = kv.len;
+            self.kv_append(kv, *token)?;
+            logits.extend(self.synth_logits(*token, pos));
+        }
+        Ok(DecodeOut { logits, vocab })
     }
 
     /// Ingest `tokens` into a single trajectory's KV at its current
-    /// length (prompt prefill or tool-output extension).
+    /// length (prompt prefill or tool-output extension). Synthetic:
+    /// appends every token and returns the final position's logits.
     pub fn extend(
         &self,
-        _kv: &mut TrajKv,
-        _tokens: &[i32],
+        kv: &mut TrajKv,
+        tokens: &[i32],
     ) -> Result<Vec<f32>> {
-        bail!("extend: pjrt feature disabled");
+        ensure!(!tokens.is_empty(), "extend: empty token slice");
+        let mut last = Vec::new();
+        for &t in tokens {
+            let pos = kv.len;
+            self.kv_append(kv, t)?;
+            last = self.synth_logits(t, pos);
+        }
+        Ok(last)
     }
 
     /// Predict log1p(remaining tokens) for feature rows `[n, F]`.
-    pub fn predict(&self, _features: &[f32]) -> Result<Vec<f32>> {
-        bail!("predict: pjrt feature disabled");
+    /// Synthetic: a fixed smooth function of the features, bounded to a
+    /// plausible log1p range.
+    pub fn predict(&self, features: &[f32]) -> Result<Vec<f32>> {
+        let f = self.manifest.n_features;
+        ensure!(
+            f > 0 && features.len() % f == 0,
+            "predict: feature rows must be a multiple of {f}"
+        );
+        Ok(features
+            .chunks(f)
+            .map(|row| {
+                let s: f32 = row
+                    .iter()
+                    .enumerate()
+                    .map(|(i, x)| x * (0.3 + 0.1 * i as f32))
+                    .sum();
+                (s.abs() + 1.0).ln().min(8.0)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_engine_decodes_deterministically() {
+        let e = Engine::synthetic();
+        let mut kv1 = e.new_kv();
+        let mut kv2 = e.new_kv();
+        e.extend(&mut kv1, &[3, 5, 7]).unwrap();
+        e.extend(&mut kv2, &[3, 5, 7]).unwrap();
+        assert_eq!(kv1.len, 3);
+        let o1 = e.decode_step(&mut [(9, &mut kv1)]).unwrap();
+        let o2 = e.decode_step(&mut [(9, &mut kv2)]).unwrap();
+        assert_eq!(o1.logits, o2.logits);
+        assert_eq!(o1.vocab, e.manifest.model.vocab);
+        assert_eq!(kv1.len, 4);
+    }
+
+    #[test]
+    fn synthetic_engine_bounds_the_ring() {
+        let e = Engine::synthetic();
+        let max = e.manifest.model.max_seq;
+        let mut kv = e.new_kv();
+        let toks: Vec<i32> = (0..max as i32).collect();
+        e.extend(&mut kv, &toks).unwrap();
+        assert!(e.decode_step(&mut [(1, &mut kv)]).is_err());
+    }
+
+    #[test]
+    fn load_still_requires_pjrt() {
+        assert!(Engine::load(Path::new("/nonexistent")).is_err());
     }
 }

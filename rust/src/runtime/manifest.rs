@@ -62,6 +62,32 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Tiny in-memory manifest for the synthetic stub engine: no
+    /// artifacts on disk, just shapes (vocab 256, ~2-layer model, the
+    /// standard 256-token KV ring). Lets the no-`pjrt` build exercise
+    /// the full serving path end-to-end.
+    pub fn synthetic() -> Manifest {
+        Manifest {
+            dir: PathBuf::new(),
+            model: ModelMeta {
+                vocab: 256,
+                d_model: 64,
+                n_layers: 2,
+                n_heads: 4,
+                n_kv_heads: 2,
+                head_dim: 16,
+                ffn_hidden: 128,
+                max_seq: 256,
+                weight_seed: 0,
+            },
+            weights_file: PathBuf::new(),
+            weight_order: Vec::new(),
+            pred_order: Vec::new(),
+            executables: Vec::new(),
+            n_features: 6,
+        }
+    }
+
     pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))?;
         let v = Json::parse(&text)?;

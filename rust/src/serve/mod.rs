@@ -23,7 +23,8 @@ use crate::coordinator::scheduler::{
     schedule_worker, ActiveSet, ScheduleAction, SchedulerQueue, StepRequest,
 };
 use crate::fault::{FaultConfig, FaultPlan, FaultStats, ToolOutcome};
-use crate::metrics::{RolloutReport, TrajectoryMetrics};
+use crate::harness::RunOutput;
+use crate::metrics::{PhaseKind, RolloutReport, TrajectoryMetrics};
 use crate::model::{sample_top_p, synth_token};
 use crate::runtime::{Engine, TrajKv};
 use crate::util::rng::Rng;
@@ -152,24 +153,24 @@ struct ServeWorker {
     kv: HashMap<usize, TrajKv>,
 }
 
-/// Outcome of a serving run.
+/// Outcome of a serving run: the unified [`RunOutput`] (report,
+/// auditor, fault counters) plus serving-only wall-clock measurements.
 pub struct ServeOutcome {
-    pub report: RolloutReport,
+    pub run: RunOutput,
     pub wall_seconds: f64,
     pub tokens_generated: usize,
     pub migrated_bytes: usize,
     /// Mean wall microseconds per KV migration (Table 1 analogue).
     pub mean_migration_us: f64,
-    /// Lifecycle auditor, present when auditing was enabled.
-    pub audit: Option<Auditor>,
-    /// Fault-injection and recovery counters (zeroed when faults are
-    /// disabled).
-    pub faults: FaultStats,
 }
 
 impl ServeOutcome {
     pub fn throughput(&self) -> f64 {
         self.tokens_generated as f64 / self.wall_seconds.max(1e-9)
+    }
+
+    pub fn report(&self) -> &RolloutReport {
+        &self.run.report
     }
 }
 
@@ -265,9 +266,11 @@ pub fn serve_rollout(
     for i in std::mem::take(&mut pending_routes) {
         let (w, _) = control.router.route_step(i);
         control.router.on_enter(w);
-        trajs[i].enqueued_at = now();
+        let t = now();
+        trajs[i].enqueued_at = t;
+        trajs[i].metrics.submit_time = t;
+        trajs[i].metrics.span_begin(PhaseKind::Queue, t);
         if let Some(a) = auditor.as_mut() {
-            let t = now();
             a.record(t, AuditEvent::Submitted { traj: i });
             a.record(t, AuditEvent::Enqueued { traj: i, worker: w });
         }
@@ -297,6 +300,11 @@ pub fn serve_rollout(
                 && t_now >= trajs[i].tool_deadline
             {
                 let prev = trajs[i].step - 1;
+                // The wait really lasted until this poll observed it:
+                // charging the detection overshoot keeps tool_time equal
+                // to the wall-clock ToolWait span.
+                trajs[i].metrics.tool_time +=
+                    t_now - trajs[i].tool_deadline;
                 if trajs[i].tool_outcome != ToolOutcome::Ok {
                     // The attempt failed (or hung to its deadline):
                     // retry with jittered backoff until the budget is
@@ -312,6 +320,7 @@ pub fn serve_rollout(
                         plan.stats_mut().failed += 1;
                         trajs[i].phase = Phase::Failed;
                         trajs[i].metrics.finish_time = t_now;
+                        trajs[i].metrics.span_close(t_now);
                         done += 1;
                         // A failed trajectory frees its ring slice and
                         // cache claims immediately.
@@ -366,6 +375,7 @@ pub fn serve_rollout(
                 }
                 trajs[i].phase = Phase::Queued;
                 trajs[i].enqueued_at = t_now;
+                trajs[i].metrics.span_begin(PhaseKind::Queue, t_now);
                 let (w, _) = control.router.route_step(i);
                 control.router.on_enter(w);
                 if let Some(a) = auditor.as_mut() {
@@ -402,18 +412,22 @@ pub fn serve_rollout(
                     ScheduleAction::Admit(req) => {
                         admit(
                             engine, &mut workers, &mut trajs, &mut control,
-                            &mut auditor, w, req, now(),
+                            &mut auditor, w, req, &t0,
                         )?;
                     }
                     ScheduleAction::PreemptAndAdmit { victim, req } => {
                         // Persist KV (already in the worker map), requeue.
                         workers[w].active.remove(victim);
+                        let tp = now();
                         trajs[victim].phase = Phase::Queued;
-                        trajs[victim].enqueued_at = now();
+                        trajs[victim].enqueued_at = tp;
                         trajs[victim].metrics.preemptions += 1;
+                        trajs[victim]
+                            .metrics
+                            .span_begin(PhaseKind::Preempted, tp);
                         if let Some(a) = auditor.as_mut() {
                             a.record(
-                                now(),
+                                tp,
                                 AuditEvent::Preempted {
                                     traj: victim,
                                     worker: w,
@@ -431,7 +445,7 @@ pub fn serve_rollout(
                         workers[w].queue.push(vreq);
                         admit(
                             engine, &mut workers, &mut trajs, &mut control,
-                            &mut auditor, w, req, now(),
+                            &mut auditor, w, req, &t0,
                         )?;
                     }
                 }
@@ -495,12 +509,14 @@ pub fn serve_rollout(
                 let step = trajs[id].step;
                 let last = step + 1 >= specs[id].n_steps();
                 if last {
+                    let tf = now();
                     trajs[id].phase = Phase::Done;
-                    trajs[id].metrics.finish_time = now();
+                    trajs[id].metrics.finish_time = tf;
+                    trajs[id].metrics.span_close(tf);
                     done += 1;
                     if let Some(a) = auditor.as_mut() {
                         a.record(
-                            now(),
+                            tf,
                             AuditEvent::Completed { traj: id, worker: w },
                         );
                     }
@@ -524,12 +540,14 @@ pub fn serve_rollout(
                     }
                     None => (lat, ToolOutcome::Ok),
                 };
+                let tw = now();
                 trajs[id].tool_outcome = outcome;
-                trajs[id].tool_deadline = now() + dur;
+                trajs[id].tool_deadline = tw + dur;
                 trajs[id].metrics.tool_time += dur;
+                trajs[id].metrics.span_begin(PhaseKind::ToolWait, tw);
                 if let Some(a) = auditor.as_mut() {
                     a.record(
-                        now(),
+                        tw,
                         AuditEvent::ToolWait { traj: id, worker: w, step },
                     );
                 }
@@ -620,12 +638,6 @@ pub fn serve_rollout(
     }
 
     let wall = now();
-    if let Some(a) = auditor.as_mut() {
-        a.check_complete(wall);
-        if cfg!(debug_assertions) {
-            a.assert_clean("serve");
-        }
-    }
     let tokens: usize = trajs.iter().map(|t| t.metrics.tokens_generated).sum();
     let mean_mig = if migration_us.is_empty() {
         0.0
@@ -642,16 +654,31 @@ pub fn serve_rollout(
         }
         None => FaultStats::default(),
     };
+    let report = RolloutReport::from_trajectories(
+        trajs.into_iter().map(|t| t.metrics).collect(),
+    );
+    if let Some(a) = auditor.as_mut() {
+        a.check_complete(wall);
+        // `gpu_exact = false`: the Decode span covers residency wall
+        // time while gpu_time only charges the per-batch decode share,
+        // so gpu_time is bounded by (not equal to) the span sum.
+        a.check_spans(&report, 1e-6, false);
+        if cfg!(debug_assertions) {
+            a.assert_clean("serve");
+        }
+    }
     Ok(ServeOutcome {
-        report: RolloutReport::from_trajectories(
-            trajs.into_iter().map(|t| t.metrics).collect(),
-        ),
+        run: RunOutput {
+            report,
+            audit: auditor,
+            faults: fault_stats,
+            faults_enabled: cfg.fault.enabled,
+            determinism_decisions: None,
+        },
         wall_seconds: wall,
         tokens_generated: tokens,
         migrated_bytes,
         mean_migration_us: mean_mig,
-        audit: auditor,
-        faults: fault_stats,
     })
 }
 
@@ -666,9 +693,10 @@ fn admit(
     auditor: &mut Option<Auditor>,
     w: usize,
     req: StepRequest,
-    t_now: f64,
+    t0: &Instant,
 ) -> anyhow::Result<()> {
     let id = req.traj_id;
+    let t_now = t0.elapsed().as_secs_f64();
     // KV residency: if it lives on another worker and wasn't migrated,
     // recompute from scratch (cache miss — the Fig. 15 penalty).
     let resident = workers[w].kv.contains_key(&id);
@@ -686,11 +714,20 @@ fn admit(
     // un-prefilled: it is the decode input.
     let target = trajs[id].log.len().saturating_sub(1);
     if trajs[id].prefilled < target {
+        trajs[id].metrics.span_begin(PhaseKind::Prefill, t_now);
         let kv = workers[w].kv.get_mut(&id).unwrap();
         let slice: Vec<i32> =
             trajs[id].log[trajs[id].prefilled..target].to_vec();
         engine.extend(kv, &slice)?;
         trajs[id].prefilled = target;
+        // Prefill runs on the engine: its wall time is GPU time, and
+        // the span boundary is the same timestamp so the two agree
+        // exactly under the auditor's span cross-check.
+        let t_after = t0.elapsed().as_secs_f64();
+        trajs[id].metrics.gpu_time += t_after - t_now;
+        trajs[id].metrics.span_begin(PhaseKind::Decode, t_after);
+    } else {
+        trajs[id].metrics.span_begin(PhaseKind::Decode, t_now);
     }
     trajs[id].phase = Phase::Running;
     trajs[id].metrics.queue_delay += t_now - trajs[id].enqueued_at;

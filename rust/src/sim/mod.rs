@@ -31,7 +31,7 @@ use crate::coordinator::scheduler::{
     StepRequest,
 };
 use crate::fault::{FaultPlan, FaultStats, ToolOutcome};
-use crate::metrics::{RolloutReport, TrajectoryMetrics};
+use crate::metrics::{PhaseKind, RolloutReport, TrajectoryMetrics};
 use crate::tools::{FaasConfig, ToolManager};
 use crate::workload::TrajectorySpec;
 use std::cmp::Ordering;
@@ -63,6 +63,10 @@ struct TrajState {
     /// Remaining token-equivalents of the current segment (prefill
     /// conversion included).
     remaining: f64,
+    /// Leading portion of `remaining` that is prefill work — consumed
+    /// first; the Prefill→Decode span boundary is the instant it
+    /// reaches zero.
+    prefill_remaining: f64,
     /// Worker currently hosting (queue or active) the trajectory.
     worker: Option<usize>,
     /// Worker holding the KV prefix (None = nothing cached anywhere).
@@ -205,6 +209,7 @@ impl<'a> Simulator<'a> {
                 phase: Phase::Queued,
                 step: 0,
                 remaining: 0.0,
+                prefill_remaining: 0.0,
                 worker: None,
                 kv_worker: None,
                 kv_tokens: 0,
@@ -452,12 +457,34 @@ impl<'a> Simulator<'a> {
             }
         };
         let mut audit = self.audit.take();
-        if let Some(a) = audit.as_mut() {
-            a.check_complete(self.now);
-        }
         let report = RolloutReport::from_trajectories(
             self.trajs.into_iter().map(|t| t.metrics).collect(),
         );
+        if let Some(a) = audit.as_mut() {
+            a.check_complete(self.now);
+            // Simulated time is exact: spans must partition completion
+            // time and reconcile with the metrics sums (gpu included).
+            a.check_spans(&report, 1e-6, true);
+        }
+        (report, audit, stats)
+    }
+
+    /// Harness entry ([`crate::harness::Run`]): run to completion and
+    /// return every artifact. Mirrors [`Simulator::run`]'s debug-build
+    /// self-auditing when no auditor was attached.
+    pub fn run_parts(mut self) -> (RolloutReport, Option<Auditor>, FaultStats) {
+        let debug_auto = cfg!(debug_assertions) && self.audit.is_none();
+        if debug_auto {
+            self.enable_audit();
+        }
+        let (report, audit, stats) = self.run_collect();
+        if debug_auto {
+            audit
+                .as_ref()
+                .expect("auditor attached above")
+                .assert_clean("sim");
+            return (report, None, stats);
+        }
         (report, audit, stats)
     }
 
@@ -480,19 +507,37 @@ impl<'a> Simulator<'a> {
 
     /// Settle elapsed work on a worker's active set up to `self.now`.
     fn settle(&mut self, worker: usize) {
-        let dt = self.now - self.workers[worker].last_update;
+        let t0 = self.workers[worker].last_update;
+        let dt = self.now - t0;
         if dt > 0.0 {
             let rate = self.worker_rate(worker);
             let done = dt * rate;
+            // Healthy batch-1 per-token time: the Formula-1 ideal.
+            // Interference (F(batch) > 1) and straggler slowdown both
+            // surface as gpu_time in excess of this.
+            let t_base = self.control.worker_token_time_at(worker, 1);
             let ids: Vec<usize> =
                 self.workers[worker].active.ids().collect();
             for id in ids {
                 let tr = &mut self.trajs[id];
+                let eff = done.min(tr.remaining);
                 tr.remaining = (tr.remaining - done).max(0.0);
                 tr.metrics.gpu_time += dt;
+                tr.metrics.ideal_gpu_time += eff * t_base;
                 // Tokens generated this interval (prefill fractions count
                 // toward throughput only at segment granularity; see
                 // segment completion).
+                if tr.prefill_remaining > 0.0 {
+                    if eff >= tr.prefill_remaining {
+                        // Prefill completes inside this interval: the
+                        // decode span opens at the exact crossing.
+                        let t_cross = t0 + tr.prefill_remaining / rate;
+                        tr.prefill_remaining = 0.0;
+                        tr.metrics.span_begin(PhaseKind::Decode, t_cross);
+                    } else {
+                        tr.prefill_remaining -= eff;
+                    }
+                }
             }
         }
         self.workers[worker].last_update = self.now;
@@ -553,8 +598,10 @@ impl<'a> Simulator<'a> {
         if cached < ctx && st.step > 0 && st.kv_worker != Some(worker) {
             st.metrics.recomputed_tokens += to_prefill;
         }
-        st.remaining =
-            gen + to_prefill as f64 * self.cfg.model.prefill_factor;
+        st.prefill_remaining =
+            to_prefill as f64 * self.cfg.model.prefill_factor;
+        st.remaining = gen + st.prefill_remaining;
+        st.metrics.span_begin(PhaseKind::Queue, self.now);
         let predicted = st.predicted;
         self.audit_ev(AuditEvent::Enqueued { traj, worker });
 
@@ -607,6 +654,12 @@ impl<'a> Simulator<'a> {
         debug_assert_eq!(st.phase, Phase::Queued);
         st.phase = Phase::Running;
         st.metrics.queue_delay += self.now - st.enqueued_at;
+        let kind = if st.prefill_remaining > 0.0 {
+            PhaseKind::Prefill
+        } else {
+            PhaseKind::Decode
+        };
+        st.metrics.span_begin(kind, self.now);
         self.workers[worker].active.insert(traj, st.predicted);
         self.audit_ev(AuditEvent::Admitted { traj, worker });
     }
@@ -619,6 +672,7 @@ impl<'a> Simulator<'a> {
         st.phase = Phase::Queued;
         st.enqueued_at = self.now;
         st.metrics.preemptions += 1;
+        st.metrics.span_begin(PhaseKind::Preempted, self.now);
         // KV of the partial segment persists on the worker.
         st.kv_worker = Some(worker);
         self.req_seq += 1;
@@ -667,9 +721,13 @@ impl<'a> Simulator<'a> {
             // cached on this worker.
             st.kv_worker = Some(worker);
         }
-        let ctx_after = self.context_tokens(traj)
-            + gen
-            + spec.steps[step].tool_output_tokens;
+        // Cached context = prompt + generations + *prior* tool outputs.
+        // This step's tool output is NOT credited here: like the serving
+        // path, it must be prefilled at the next admission, so the next
+        // segment carries `tool_output_tokens * prefill_factor` extra
+        // work (and emits a Prefill span) exactly when the tool returned
+        // tokens.
+        let ctx_after = self.context_tokens(traj) + gen;
         self.trajs[traj].kv_tokens = ctx_after;
 
         let last_step = step + 1 >= spec.n_steps();
@@ -678,6 +736,7 @@ impl<'a> Simulator<'a> {
                 let st = &mut self.trajs[traj];
                 st.phase = Phase::Done;
                 st.metrics.finish_time = self.now;
+                st.metrics.span_close(self.now);
             }
             self.audit_kv_set(traj, None, 0);
             self.audit_ev(AuditEvent::Completed { traj, worker });
@@ -693,6 +752,7 @@ impl<'a> Simulator<'a> {
         self.trajs[traj].predicted = pred;
         self.trajs[traj].step = step + 1;
         self.trajs[traj].phase = Phase::ToolWait;
+        self.trajs[traj].metrics.span_begin(PhaseKind::ToolWait, self.now);
         self.trajs[traj].worker = None;
         self.audit_ev(AuditEvent::ToolWait { traj, worker, step });
 
@@ -815,6 +875,9 @@ impl<'a> Simulator<'a> {
             // Exposed migration overhead: the step must wait for the KV
             // to land (rare — Table 1 shows migration ≪ tool time).
             self.trajs[traj].phase = Phase::MigrationWait;
+            self.trajs[traj]
+                .metrics
+                .span_begin(PhaseKind::MigrationWait, self.now);
             return;
         }
         self.enqueue_step(traj);
@@ -904,6 +967,10 @@ impl<'a> Simulator<'a> {
         if let Some(p) = self.faults.as_mut() {
             p.stats_mut().retries += 1;
         }
+        // Backoff is part of the tool wait: charging it keeps tool_time
+        // equal to the ToolWait span sum (the serving path already
+        // charges its retry delay the same way).
+        self.trajs[traj].metrics.tool_time += delay;
         self.audit_ev(AuditEvent::ToolRetry {
             traj,
             attempt: attempt as usize,
@@ -925,6 +992,11 @@ impl<'a> Simulator<'a> {
     fn fail_trajectory(&mut self, traj: usize, reason: FailReason) {
         if self.trajs[traj].migrating {
             self.trajs[traj].pending_fail = true;
+            // The tool wait is over (budget exhausted); the remaining
+            // delay until the transfer resolves is migration exposure.
+            self.trajs[traj]
+                .metrics
+                .span_begin(PhaseKind::MigrationWait, self.now);
             return;
         }
         self.audit_kv_set(traj, None, 0);
@@ -936,6 +1008,7 @@ impl<'a> Simulator<'a> {
             st.kv_worker = None;
             st.kv_tokens = 0;
             st.metrics.finish_time = self.now;
+            st.metrics.span_close(self.now);
         }
         self.control.router.evict_cache(traj);
         self.control.transmissions.cancel(traj);
@@ -1100,6 +1173,8 @@ impl<'a> Simulator<'a> {
 }
 
 /// Convenience: simulate one rollout batch end-to-end.
+#[deprecated(note = "use crate::harness::Run: \
+                     Run::new(cfg, history, specs).exec()")]
 pub fn simulate(
     cfg: &SimConfig,
     history: &[TrajectorySpec],
@@ -1110,6 +1185,8 @@ pub fn simulate(
 
 /// Simulate with the lifecycle auditor attached and returned (CLI
 /// `--audit` dumps and differential decision checks).
+#[deprecated(note = "use crate::harness::Run: \
+                     Run::new(cfg, history, specs).audit().exec()")]
 pub fn simulate_audited(
     cfg: &SimConfig,
     history: &[TrajectorySpec],
@@ -1122,6 +1199,8 @@ pub fn simulate_audited(
 /// attached, fault-injection and recovery counters returned. With
 /// `cfg.fault.enabled` unset this degenerates to [`simulate_audited`]
 /// plus zeroed stats.
+#[deprecated(note = "use crate::harness::Run: \
+                     Run::new(cfg, history, specs).audit().faults(seed).exec()")]
 pub fn simulate_chaos(
     cfg: &SimConfig,
     history: &[TrajectorySpec],
@@ -1132,6 +1211,10 @@ pub fn simulate_chaos(
 
 #[cfg(test)]
 mod tests {
+    // The unit tests below predate the `harness::Run` API and keep
+    // exercising the deprecated shims on purpose (the shims must stay
+    // behaviourally identical until they are removed).
+    #![allow(deprecated)]
     use super::*;
     use crate::config::{PolicyConfig, SimConfig};
     use crate::predictor::history_workload;
