@@ -503,6 +503,35 @@ mod tests {
     }
 
     #[test]
+    fn degraded_cap_is_stateless_and_does_not_compound() {
+        // The degraded cut is recomputed from the *nominal* slot count
+        // on every invocation, so a second (third, ...) crash while
+        // already degraded keeps the cap at floor(8 * 0.875) = 7 —
+        // never a compounded 7 * 0.875 = 6.
+        let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+        q.push(req(100, 900.0, 100));
+        let mut active = ActiveSet::new();
+        for i in 0..7 {
+            active.insert(i, 100.0);
+        }
+        // At the cap: repeated degraded passes all idle (and keep
+        // preemption suspended despite the high-priority request).
+        for _ in 0..4 {
+            assert_eq!(
+                schedule_worker_degraded(&mut q, &active, 8, true, true),
+                ScheduleAction::Idle
+            );
+        }
+        // One slot frees: the very next degraded pass admits at 6
+        // active, proving the cap is still 7, not a compounded 6.
+        active.remove(3);
+        match schedule_worker_degraded(&mut q, &active, 8, true, true) {
+            ScheduleAction::Admit(r) => assert_eq!(r.traj_id, 100),
+            other => panic!("expected admit at 6/7 slots, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn remove_trajectory_for_migration() {
         let mut q = SchedulerQueue::new(SchedulerKind::Pps);
         q.push(req(1, 10.0, 0));

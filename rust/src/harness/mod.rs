@@ -28,6 +28,8 @@ use crate::audit::{diff_decisions, Auditor};
 use crate::config::SimConfig;
 use crate::fault::FaultStats;
 use crate::metrics::RolloutReport;
+use crate::runtime::Engine;
+use crate::serve::{serve_rollout, ServeConfig, ServeOutcome};
 use crate::sim::Simulator;
 use crate::util::json::Json;
 use crate::workload::TrajectorySpec;
@@ -150,6 +152,92 @@ impl Run {
     }
 }
 
+/// [`Run`]'s counterpart for the serving path: layers audit, fault
+/// injection, and the same-seed determinism gate over
+/// [`serve_rollout`]. On the default (stub-engine) build the rollout
+/// runs on real per-worker threads with the full fault model; under
+/// `--features pjrt` it runs single-threaded with tool faults only.
+pub struct ServeRun<'e> {
+    engine: &'e Engine,
+    cfg: ServeConfig,
+    history: Vec<TrajectorySpec>,
+    specs: Vec<TrajectorySpec>,
+    determinism: bool,
+}
+
+impl<'e> ServeRun<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        cfg: &ServeConfig,
+        history: &[TrajectorySpec],
+        specs: &[TrajectorySpec],
+    ) -> Self {
+        ServeRun {
+            engine,
+            cfg: cfg.clone(),
+            history: history.to_vec(),
+            specs: specs.to_vec(),
+            determinism: false,
+        }
+    }
+
+    /// Attach the lifecycle auditor and return it in the output.
+    pub fn audit(mut self) -> Self {
+        self.cfg.audit = true;
+        self
+    }
+
+    /// Arm the fault plan with `seed`. Implies auditing: a chaos run
+    /// that violates lifecycle invariants fails `exec`.
+    pub fn faults(mut self, seed: u64) -> Self {
+        self.cfg.fault.enabled = true;
+        self.cfg.fault.seed = seed;
+        self
+    }
+
+    /// Run twice and require byte-identical decision traces. Decisions
+    /// run on the serve path's virtual clock, so the gate holds even
+    /// though the two runs' wall-clock timings differ.
+    pub fn determinism_check(mut self) -> Self {
+        self.determinism = true;
+        self
+    }
+
+    /// Execute the serve rollout under the configured modes.
+    pub fn exec(self) -> anyhow::Result<ServeOutcome> {
+        let mut cfg = self.cfg;
+        if cfg.fault.enabled || self.determinism {
+            cfg.audit = true;
+        }
+        let mut out =
+            serve_rollout(self.engine, &cfg, &self.history, &self.specs)?;
+        if self.determinism {
+            let second =
+                serve_rollout(self.engine, &cfg, &self.history, &self.specs)?;
+            let a = out.run.audit.as_ref().expect("auditor attached above");
+            let b =
+                second.run.audit.as_ref().expect("auditor attached above");
+            let diff = diff_decisions(a, b);
+            anyhow::ensure!(
+                diff.is_empty(),
+                "serve determinism check failed: {} divergent decisions \
+                 (first: {:?})",
+                diff.len(),
+                diff.first()
+            );
+            out.run.determinism_decisions = Some(a.decision_trace().len());
+        }
+        if let Some(a) = out.run.audit.as_ref() {
+            anyhow::ensure!(
+                a.ok(),
+                "serve run violated lifecycle invariants:\n{}",
+                a.report_violations()
+            );
+        }
+        Ok(out)
+    }
+}
+
 impl RunOutput {
     /// The shared one-stop human-readable result surface: rollout
     /// summary line, plus fault counters when a plan was armed, plus
@@ -257,6 +345,25 @@ mod tests {
         assert!(out.determinism_decisions.unwrap() > 0);
         assert!(out.summary("chaos").contains("faults: injected="));
         assert!(out.summary("chaos").contains("determinism check:"));
+    }
+
+    /// The serve-path builder runs on the threaded backend (stub
+    /// engine), so gate on the non-PJRT build.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn serve_run_determinism_gate_passes_on_stub_engine() {
+        let engine = crate::runtime::Engine::synthetic();
+        let (_, history, specs) = setup(15);
+        let mut cfg = crate::serve::ServeConfig::default();
+        cfg.seed = 15;
+        let out = ServeRun::new(&engine, &cfg, &history, &specs)
+            .audit()
+            .determinism_check()
+            .exec()
+            .unwrap();
+        assert!(out.run.determinism_decisions.unwrap() > 0);
+        let a = out.run.audit.expect("auditor attached");
+        assert!(a.ok(), "{}", a.report_violations());
     }
 
     #[test]

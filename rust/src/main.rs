@@ -19,7 +19,7 @@
 
 use heddle::config::{ModelCost, PolicyConfig, SimConfig};
 use heddle::figures as figs;
-use heddle::harness::Run;
+use heddle::harness::{Run, ServeRun};
 use heddle::predictor::history_workload;
 use heddle::util::cli::Args;
 use heddle::util::json::Json;
@@ -54,6 +54,25 @@ fn write_report_json(args: &Args, doc: &Json) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Resolve the serve engine. `--synthetic` selects the in-process stub
+/// (the `Send`-safe engine behind the threaded serve backend) so CI can
+/// exercise the full fault surface without compiled artifacts; PJRT
+/// builds reject the flag because their engine is load-only. Without
+/// the flag, artifacts load from `--artifacts <dir>`.
+fn load_serve_engine(args: &Args) -> anyhow::Result<heddle::runtime::Engine> {
+    if args.flag("synthetic") {
+        #[cfg(not(feature = "pjrt"))]
+        {
+            return Ok(heddle::runtime::Engine::synthetic());
+        }
+        #[cfg(feature = "pjrt")]
+        anyhow::bail!(
+            "--synthetic needs the stub engine; rebuild without --features pjrt"
+        );
+    }
+    heddle::runtime::Engine::load(Path::new(args.get_or("artifacts", "artifacts")))
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -64,13 +83,11 @@ fn main() -> anyhow::Result<()> {
     };
     match cmd {
         "serve" => {
-            let engine = heddle::runtime::Engine::load(Path::new(
-                args.get_or("artifacts", "artifacts"),
-            ))?;
+            let engine = load_serve_engine(&args)?;
             let policy =
                 PolicyConfig::by_name(args.get_or("policy", "heddle"), 1)
                     .ok_or_else(|| anyhow::anyhow!("unknown policy"))?;
-            let mut cfg = heddle::serve::ServeConfig {
+            let cfg = heddle::serve::ServeConfig {
                 n_workers: args.get_usize("workers", 4),
                 max_batch: args.get_usize("batch", 8),
                 policy,
@@ -78,11 +95,6 @@ fn main() -> anyhow::Result<()> {
                 audit: args.flag("audit"),
                 ..Default::default()
             };
-            if args.flag("faults") {
-                cfg.fault.enabled = true;
-                cfg.fault.seed =
-                    args.get_u64("fault-seed", cfg.fault.seed);
-            }
             let domain = Domain::parse(args.get_or("domain", "coding"))
                 .ok_or_else(|| anyhow::anyhow!("bad domain"))?;
             let mut wl = WorkloadConfig::new(
@@ -93,8 +105,20 @@ fn main() -> anyhow::Result<()> {
             wl.group_size = args.get_usize("group", 8);
             let specs = generate(&wl);
             let history = history_workload(domain, params.seed);
-            let out =
-                heddle::serve::serve_rollout(&engine, &cfg, &history, &specs)?;
+            // Same stackable-mode chain as `simulate`: the harness turns
+            // the auditor on whenever faults or the determinism check
+            // need it and gates `exec` on the lifecycle invariants.
+            let mut run = ServeRun::new(&engine, &cfg, &history, &specs);
+            if args.flag("audit") {
+                run = run.audit();
+            }
+            if args.flag("faults") {
+                run = run.faults(args.get_u64("fault-seed", cfg.fault.seed));
+            }
+            if args.flag("determinism-check") {
+                run = run.determinism_check();
+            }
+            let out = run.exec()?;
             println!("{}", out.run.summary("serve"));
             println!(
                 "wall={:.2}s tokens={} throughput={:.1} tok/s",
@@ -395,6 +419,9 @@ fn main() -> anyhow::Result<()> {
                  heddle|verl|verl*|slime --domain coding|search|math\n\
                  modes (stackable): --audit [--audit-out FILE] --faults \
                  [--fault-seed N] --determinism-check\n\
+                 serve: --synthetic (stub engine; threaded workers + full \
+                 fault surface) --workers N --batch N --group N \
+                 --artifacts DIR\n\
                  reporting: --report-json FILE (stable schema_version 1)\n\
                  bench: --seeds N (consecutive seeds per policy; default \
                  3) writes BENCH_rollout.json unless --report-json is \

@@ -22,9 +22,10 @@ pub enum PhaseKind {
     Decode,
     /// Blocked on a tool invocation (includes retry backoff).
     ToolWait,
-    /// Tool finished but a KV transfer is still in flight
-    /// (simulator-only: the serving path migrates synchronously
-    /// inside the tool window).
+    /// Tool finished but a KV transfer is still in flight. Emitted by
+    /// the simulator and the threaded serve backend; the single-thread
+    /// PJRT backend migrates synchronously inside the tool window and
+    /// never exposes this phase.
     MigrationWait,
     /// Preempted and parked off-worker, waiting for re-admission.
     Preempted,

@@ -11,7 +11,16 @@
 //! produce deterministic pseudo-logits and maintain real KV lengths, so
 //! the serving path (admission, prefill, decode, tool waits, migration)
 //! runs end-to-end without artifacts — that is what the no-`pjrt`
-//! sim-vs-serve telemetry tests drive.
+//! sim-vs-serve telemetry and fault-parity tests drive.
+//!
+//! **Thread-safety contract.** This engine holds only plain owned data
+//! (`Manifest`), so it is `Send + Sync` by construction. The threaded
+//! serve backend (`serve::threaded`) relies on that to share one
+//! `&Engine` across per-worker OS threads; keep any future state
+//! either immutable or behind a sync primitive, or the default serve
+//! path silently loses its multi-threaded backend. (The PJRT engine is
+//! deliberately `!Send` — its client is single-threaded — which is why
+//! `--features pjrt` builds fall back to one-thread serving.)
 
 use super::manifest::Manifest;
 use crate::util::rng::Rng;

@@ -1,20 +1,34 @@
 //! Real-execution serving path: the end-to-end validation that all three
 //! layers compose (DESIGN.md §6).
 //!
-//! Drives N *logical* rollout workers over the real PJRT [`Engine`]
-//! (MiniQwen artifacts): prompts are prefilled with `extend`, every
-//! generated token comes from a real `decode_step` + nucleus sampling,
-//! tool calls run on the wall clock through the simulated serverless
-//! manager, and the full Heddle control plane (scheduler, placement,
-//! migration, router) makes every orchestration decision.
+//! Drives N rollout workers over a real [`Engine`]: prompts are
+//! prefilled with `extend`, every generated token comes from a real
+//! `decode_step` + nucleus sampling, tool calls run through the
+//! simulated serverless manager, and the full Heddle control plane
+//! (scheduler, placement, migration, router) makes every orchestration
+//! decision.
 //!
-//! Workers are multiplexed on one thread because the `xla` crate's PJRT
-//! handles are `!Send` (Rc-based); each worker still has its own queue,
-//! active set, and KV residency map, so the orchestration semantics are
-//! identical to a multi-process deployment. Model parallelism does not
-//! exist on a CPU client, so the real path always runs `Fixed(1)`
-//! resources — the heterogeneous-MP claims are validated by the
-//! simulator (DESIGN.md §1).
+//! Two execution backends share these semantics:
+//!
+//! * **Threaded** ([`threaded`], the default build): each worker is a
+//!   real OS thread owning its queue, active set, and KV residency map,
+//!   talking to the control plane over channels. All five fault classes
+//!   run here — worker crashes are real thread teardown with
+//!   displacement/re-placement, stragglers stride the decode clock, and
+//!   cold-start spikes hit the FaaS pool — under the same auditor
+//!   invariants and `--determinism-check` gate as the simulator.
+//! * **Single-thread** ([`serve_rollout_single`], the only backend
+//!   under `--features pjrt`): workers are multiplexed on one thread
+//!   because the `xla` crate's PJRT handles are `!Send` (Rc-based).
+//!   Queue/active/KV state is still per-worker, but only the tool fault
+//!   classes (failures, hangs, retries) are injected there.
+//!
+//! Model parallelism does not exist on a CPU client, so the real path
+//! always runs `Fixed(1)` resources — the heterogeneous-MP claims are
+//! validated by the simulator (DESIGN.md §1).
+
+#[cfg(not(feature = "pjrt"))]
+pub mod threaded;
 
 use crate::audit::{AuditEvent, Auditor, FailReason};
 use crate::config::{PolicyConfig, ResourceKind, SimConfig};
@@ -39,6 +53,9 @@ pub struct ServeConfig {
     pub max_batch: usize,
     pub policy: PolicyConfig,
     /// Wall-clock scale on spec tool latencies (1.0 = as specified).
+    /// Only the single-thread backend sleeps on the wall clock; the
+    /// threaded backend runs tool latencies on its virtual clock at
+    /// spec-native scale, so this knob does not apply there.
     pub tool_scale: f64,
     /// Scale on spec token counts so trajectories fit the KV ring.
     pub token_scale: f64,
@@ -48,10 +65,13 @@ pub struct ServeConfig {
     /// Attach the lifecycle-invariant auditor (always on in debug
     /// builds) and return it in the outcome.
     pub audit: bool,
-    /// Fault injection (off by default). The serving path injects tool
-    /// failures and hangs with backoff retries and a retry budget;
-    /// worker crashes, stragglers, and cold-start spikes are simulator
-    /// concerns (see ROADMAP "Fault model & recovery semantics").
+    /// Fault injection (off by default). The threaded backend injects
+    /// all five fault classes: tool failures and hangs with backoff
+    /// retries and a retry budget, worker crashes (thread teardown with
+    /// displacement and re-placement under sticky degraded admission),
+    /// stragglers, and FaaS cold-start spikes. The single-thread PJRT
+    /// backend injects only the tool classes (see ROADMAP "Fault model
+    /// & recovery semantics").
     pub fault: FaultConfig,
 }
 
@@ -177,7 +197,30 @@ impl ServeOutcome {
 /// Run one rollout batch on the real engine. Trajectory segment lengths
 /// and tool behaviour replay `specs` (pre-fit to the ring); tokens are
 /// sampled from the real model.
+///
+/// Dispatches to the per-worker-thread backend on the default (stub
+/// engine) build and to the single-thread multiplexer under
+/// `--features pjrt`, where the engine handles are `!Send`.
 pub fn serve_rollout(
+    engine: &Engine,
+    cfg: &ServeConfig,
+    history: &[TrajectorySpec],
+    specs: &[TrajectorySpec],
+) -> anyhow::Result<ServeOutcome> {
+    #[cfg(not(feature = "pjrt"))]
+    {
+        threaded::serve_rollout_threaded(engine, cfg, history, specs)
+    }
+    #[cfg(feature = "pjrt")]
+    {
+        serve_rollout_single(engine, cfg, history, specs)
+    }
+}
+
+/// Single-thread backend: every worker multiplexed on the calling
+/// thread. The only backend compatible with the `!Send` PJRT engine;
+/// injects the tool fault classes only.
+pub fn serve_rollout_single(
     engine: &Engine,
     cfg: &ServeConfig,
     history: &[TrajectorySpec],

@@ -1,0 +1,1378 @@
+//! Multi-threaded serving path over the `Send`-safe stub [`Engine`].
+//!
+//! Each rollout worker is a real OS thread that owns its scheduler
+//! queue, active set, and KV residency map; the control plane (the
+//! calling thread) exchanges step requests and scheduling decisions
+//! with the workers over channels. Worker crashes are injected as real
+//! thread teardown: the thread exits, dropping its queue, batch, and
+//! every resident KV cache, and the control plane re-places the
+//! displaced trajectories on the survivors under sticky degraded-mode
+//! admission — the same recovery semantics the simulator implements in
+//! `Simulator::on_worker_crash`.
+//!
+//! # Two clocks
+//!
+//! Decisions and measurements run on different clocks:
+//!
+//! * A **deterministic virtual clock** (`vt`, spec-native seconds)
+//!   orders every orchestration decision: tool deadlines, retry
+//!   backoff, cold-start pool warmth, migration transfer completion,
+//!   and worker crash times. Each global decode round advances `vt` by
+//!   a fixed `round_dt`; when no worker has active trajectories, `vt`
+//!   jumps to the next pending virtual event instead of sleeping. Since
+//!   [`Auditor::decision_trace`](crate::audit::Auditor::decision_trace)
+//!   is time-free, two same-seed runs therefore make byte-identical
+//!   decisions regardless of machine speed — the `--determinism-check`
+//!   gate holds on the serving path even under a full fault plan.
+//! * The **wall clock** stamps spans and metrics (queue delay, GPU
+//!   time, tool time), so the telemetry still measures real execution.
+//!
+//! Stragglers decode on a stride: a worker with a slowdown factor `k`
+//! participates in every ⌈k⌉-th decode round, so its segments take `k`×
+//! longer in virtual time — the same decode-rate penalty the simulator
+//! applies via `worker_rate`.
+
+use super::{fit_to_ring, ServeConfig, ServeOutcome};
+use crate::audit::{AuditEvent, Auditor, FailReason};
+use crate::config::{ResourceKind, SchedulerKind, SimConfig};
+use crate::coordinator::control::ControlPlane;
+use crate::coordinator::migration::MigrationRequest;
+use crate::coordinator::scheduler::{
+    schedule_worker_degraded, ActiveSet, ScheduleAction, SchedulerQueue,
+    StepRequest,
+};
+use crate::fault::{FaultPlan, FaultStats, ToolOutcome};
+use crate::harness::RunOutput;
+use crate::metrics::{PhaseKind, RolloutReport, TrajectoryMetrics};
+use crate::model::{sample_top_p, synth_token};
+use crate::runtime::{Engine, TrajKv};
+use crate::tools::{FaasConfig, ToolManager};
+use crate::util::rng::Rng;
+use crate::workload::TrajectorySpec;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+// The stub engine is plain owned data behind `&self` methods; worker
+// threads borrow it concurrently, so regressing these bounds (e.g. by
+// adding an `Rc` field) must fail to compile rather than at runtime.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Engine>();
+    assert_send_sync::<TrajKv>();
+};
+
+/// Control plane -> worker commands.
+enum Cmd {
+    /// Push a step request; `log` is the trajectory's current context.
+    Enqueue { req: StepRequest, log: Vec<i32> },
+    /// Run the admission/preemption fixed point and report decisions.
+    Schedule { degraded: bool },
+    /// One decode step over the active set.
+    Decode,
+    /// Remove a trajectory from the active set (segment finished).
+    Deactivate { traj: usize },
+    /// Drop a trajectory's residency (terminal, or stale cache copy).
+    Drop { traj: usize },
+    /// Ship a trajectory's KV back to the control plane (migration).
+    MigrateOut { traj: usize },
+    /// Land a migrated KV on this worker.
+    MigrateIn { traj: usize, kv: Box<TrajKv>, log: Vec<i32>, prefilled: usize },
+    /// Fault injection: die, dropping queue, batch, and all residents.
+    Crash,
+    Shutdown,
+}
+
+/// Worker -> control plane replies (only for request/response commands).
+enum Reply {
+    Sched(Vec<SchedEvent>),
+    Decoded { results: Vec<(usize, i32)>, dt: f64 },
+    KvOut { kv: Box<TrajKv>, log: Vec<i32>, prefilled: usize },
+    Err(String),
+}
+
+/// One scheduling decision a worker made during a `Schedule` pass.
+enum SchedEvent {
+    Admitted {
+        traj: usize,
+        /// Wall seconds the admission prefill took (0 when none ran).
+        prefill_dt: f64,
+        /// Tokens ingested by the admission prefill.
+        prefill_tokens: usize,
+        /// Cached tokens before the prefill (0 = cold / full recompute).
+        prefilled_before: usize,
+        /// Cached tokens after the prefill (= context - 1).
+        prefilled_after: usize,
+    },
+    Preempted { victim: usize, kv_tokens: usize },
+}
+
+struct WorkerCfg {
+    scheduler: SchedulerKind,
+    max_batch: usize,
+    preemption: bool,
+    temperature: f64,
+    top_p: f64,
+    sample_seed: u64,
+}
+
+/// A trajectory resident on a worker: its KV cache plus the context log
+/// it was built from.
+struct Resident {
+    kv: TrajKv,
+    log: Vec<i32>,
+    prefilled: usize,
+}
+
+/// Worker-local requeue sequence numbers (preemption victims) live in a
+/// disjoint namespace from the control plane's request sequence.
+const LOCAL_SEQ_BASE: u64 = 1 << 63;
+
+fn worker_main(
+    engine: &Engine,
+    cfg: WorkerCfg,
+    rx: Receiver<Cmd>,
+    tx: Sender<Reply>,
+) {
+    let mut queue = SchedulerQueue::new(cfg.scheduler);
+    let mut active = ActiveSet::new();
+    let mut res: HashMap<usize, Resident> = HashMap::new();
+    let mut last_req: HashMap<usize, StepRequest> = HashMap::new();
+    let mut local_seq: u64 = LOCAL_SEQ_BASE;
+    let mut rng = Rng::new(cfg.sample_seed);
+
+    let fail = |tx: &Sender<Reply>, msg: String| {
+        let _ = tx.send(Reply::Err(msg));
+    };
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Enqueue { req, log } => {
+                // The control plane's log is authoritative: it may carry
+                // tool-output tokens the resident copy predates.
+                match res.get_mut(&req.traj_id) {
+                    Some(r) => r.log = log,
+                    None => {
+                        res.insert(
+                            req.traj_id,
+                            Resident {
+                                kv: engine.new_kv(),
+                                log,
+                                prefilled: 0,
+                            },
+                        );
+                    }
+                }
+                queue.push(req);
+            }
+            Cmd::Schedule { degraded } => {
+                let mut events = Vec::new();
+                loop {
+                    let action = schedule_worker_degraded(
+                        &mut queue,
+                        &active,
+                        cfg.max_batch,
+                        cfg.preemption,
+                        degraded,
+                    );
+                    let req = match action {
+                        ScheduleAction::Idle => break,
+                        ScheduleAction::Admit(req) => req,
+                        ScheduleAction::PreemptAndAdmit { victim, req } => {
+                            active.remove(victim);
+                            let kv_tokens = res
+                                .get(&victim)
+                                .map(|r| r.prefilled)
+                                .unwrap_or(0);
+                            // KV persists in `res`; requeue locally with
+                            // a worker-scoped sequence number.
+                            let mut vreq = last_req[&victim];
+                            local_seq += 1;
+                            vreq.seq = local_seq;
+                            queue.push(vreq);
+                            events
+                                .push(SchedEvent::Preempted { victim, kv_tokens });
+                            req
+                        }
+                    };
+                    let id = req.traj_id;
+                    let r = res.get_mut(&id).expect("enqueued without log");
+                    let target = r.log.len().saturating_sub(1);
+                    let before = r.prefilled;
+                    let mut prefill_dt = 0.0;
+                    let mut prefill_tokens = 0;
+                    if r.prefilled < target {
+                        let slice: Vec<i32> =
+                            r.log[r.prefilled..target].to_vec();
+                        let tp = Instant::now();
+                        if let Err(e) = engine.extend(&mut r.kv, &slice) {
+                            fail(&tx, format!("prefill t{id}: {e}"));
+                            return;
+                        }
+                        prefill_dt = tp.elapsed().as_secs_f64();
+                        prefill_tokens = slice.len();
+                        r.prefilled = target;
+                    }
+                    active.insert(id, req.predicted_len);
+                    last_req.insert(id, req);
+                    events.push(SchedEvent::Admitted {
+                        traj: id,
+                        prefill_dt,
+                        prefill_tokens,
+                        prefilled_before: before,
+                        prefilled_after: target,
+                    });
+                }
+                if tx.send(Reply::Sched(events)).is_err() {
+                    return;
+                }
+            }
+            Cmd::Decode => {
+                let ids: Vec<usize> = active.ids().collect();
+                let mut taken: Vec<(usize, Resident)> = ids
+                    .iter()
+                    .map(|&id| (id, res.remove(&id).expect("kv resident")))
+                    .collect();
+                let t0 = Instant::now();
+                let out = {
+                    let mut entries: Vec<(i32, &mut TrajKv)> = taken
+                        .iter_mut()
+                        .map(|(_, r)| (*r.log.last().unwrap(), &mut r.kv))
+                        .collect();
+                    engine.decode_step(&mut entries)
+                };
+                let dt = t0.elapsed().as_secs_f64();
+                let out = match out {
+                    Ok(o) => o,
+                    Err(e) => {
+                        fail(&tx, format!("decode: {e}"));
+                        return;
+                    }
+                };
+                let mut results = Vec::with_capacity(ids.len());
+                for (row, (id, r)) in taken.iter_mut().enumerate() {
+                    let tok = sample_top_p(
+                        out.row(row),
+                        cfg.temperature,
+                        cfg.top_p,
+                        &mut rng,
+                    ) as i32;
+                    r.log.push(tok);
+                    r.prefilled += 1; // decoded token is cached
+                    results.push((*id, tok));
+                }
+                for (id, r) in taken {
+                    res.insert(id, r);
+                }
+                if tx.send(Reply::Decoded { results, dt }).is_err() {
+                    return;
+                }
+            }
+            Cmd::Deactivate { traj } => {
+                active.remove(traj);
+            }
+            Cmd::Drop { traj } => {
+                res.remove(&traj);
+                last_req.remove(&traj);
+            }
+            Cmd::MigrateOut { traj } => {
+                let Some(r) = res.remove(&traj) else {
+                    fail(&tx, format!("migrate-out t{traj}: not resident"));
+                    return;
+                };
+                last_req.remove(&traj);
+                let ok = tx
+                    .send(Reply::KvOut {
+                        kv: Box::new(r.kv),
+                        log: r.log,
+                        prefilled: r.prefilled,
+                    })
+                    .is_ok();
+                if !ok {
+                    return;
+                }
+            }
+            Cmd::MigrateIn { traj, kv, log, prefilled } => {
+                res.insert(traj, Resident { kv: *kv, log, prefilled });
+            }
+            // Real teardown: dropping out of the loop drops the queue,
+            // the active set, and every resident KV cache with it.
+            Cmd::Crash | Cmd::Shutdown => return,
+        }
+    }
+}
+
+// ---- control plane ---------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Queued,
+    Running,
+    ToolWait,
+    /// Tool finished but the KV transfer is still in flight.
+    MigrationWait,
+    Done,
+    Failed,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ToolState {
+    Idle,
+    /// Attempt in flight; resolves at `tool_deadline_vt`.
+    Waiting,
+    /// Failed attempt backing off; next attempt at `retry_at_vt`.
+    BackingOff,
+}
+
+struct CTraj {
+    phase: Phase,
+    step: usize,
+    seg_done: usize,
+    log: Vec<i32>,
+    /// Worker holding this trajectory's step (queued or running).
+    worker: Option<usize>,
+    /// Worker whose ring holds the KV prefix (may differ while parked).
+    kv_home: Option<usize>,
+    kv_tokens: usize,
+    migrating: bool,
+    pending_fail: bool,
+    tool_state: ToolState,
+    tool_outcome: ToolOutcome,
+    tool_deadline_vt: f64,
+    retry_at_vt: f64,
+    tool_step: usize,
+    tool_lat: f64,
+    tool_attempts: u32,
+    faulted: bool,
+    enqueued_wall: f64,
+    wait_started_wall: f64,
+    predicted: f64,
+    metrics: TrajectoryMetrics,
+}
+
+struct Link {
+    tx: Sender<Cmd>,
+    rx: Receiver<Reply>,
+}
+
+/// KV pulled off a source worker and parked while its virtual transfer
+/// is in flight: (cache, context log, prefilled tokens).
+type MigPayload = (Box<TrajKv>, Vec<i32>, usize);
+
+struct Ctl<'a> {
+    cfg: &'a ServeConfig,
+    specs: &'a [TrajectorySpec],
+    sim_cfg: SimConfig,
+    control: ControlPlane,
+    auditor: Option<Auditor>,
+    faults: Option<FaultPlan>,
+    tools: ToolManager,
+    trajs: Vec<CTraj>,
+    links: Vec<Link>,
+    crashed: Vec<bool>,
+    /// Scheduled crashes, ascending (crash time, worker); `crash_next`
+    /// is the first not yet examined.
+    crash_plan: Vec<(f64, usize)>,
+    crash_next: usize,
+    degraded: bool,
+    vt: f64,
+    round: u64,
+    round_dt: f64,
+    stride: Vec<u64>,
+    t0: Instant,
+    req_seq: u64,
+    done: usize,
+    inflight: Vec<(u64, MigrationRequest, f64)>,
+    mig_buf: HashMap<u64, MigPayload>,
+    mig_seq: u64,
+    migrated_bytes: usize,
+    migration_us: Vec<f64>,
+    active_ct: Vec<usize>,
+    queued_ct: Vec<usize>,
+    vocab: usize,
+}
+
+impl Ctl<'_> {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn audit_ev(&mut self, t: f64, ev: AuditEvent) {
+        if let Some(a) = self.auditor.as_mut() {
+            a.record(t, ev);
+        }
+    }
+
+    fn send(&self, w: usize, cmd: Cmd) -> anyhow::Result<()> {
+        self.links[w]
+            .tx
+            .send(cmd)
+            .map_err(|_| anyhow::anyhow!("worker {w} hung up"))
+    }
+
+    fn recv(&self, w: usize) -> anyhow::Result<Reply> {
+        match self.links[w].rx.recv() {
+            Ok(Reply::Err(msg)) => anyhow::bail!("worker {w}: {msg}"),
+            Ok(r) => Ok(r),
+            Err(_) => anyhow::bail!("worker {w} died without replying"),
+        }
+    }
+
+    fn stats_mut(&mut self) -> Option<&mut FaultStats> {
+        self.faults.as_mut().map(|p| p.stats_mut())
+    }
+
+    /// Route the current step of `traj` and enqueue it on the chosen
+    /// worker (mirrors `Simulator::enqueue_step`). `t` is the caller's
+    /// wall timestamp: the Queue span must open exactly where the
+    /// previous span (or counter charge) closed, or `check_spans`'
+    /// contiguity and counter cross-checks pick up the drift.
+    fn enqueue_step(&mut self, i: usize, t: f64) -> anyhow::Result<()> {
+        let (w, _cache_hit) = self.control.router.route_step(i);
+        // A stale KV copy on another (live) worker cannot serve this
+        // step: drop it now; the admission prefill recomputes from
+        // scratch (the Fig. 15 cache-miss penalty).
+        let stale = match self.trajs[i].kv_home {
+            Some(src) if src != w && !self.crashed[src] => Some(src),
+            _ => None,
+        };
+        if let Some(src) = stale {
+            self.send(src, Cmd::Drop { traj: i })?;
+            self.trajs[i].kv_home = None;
+            self.trajs[i].kv_tokens = 0;
+        }
+        let st = &mut self.trajs[i];
+        st.worker = Some(w);
+        st.phase = Phase::Queued;
+        // A Queue/Preempted span interrupted by displacement still owes
+        // its wall time to queue_delay (the auditor cross-checks span
+        // sums against the counter).
+        if let Some((kind, start)) = st.metrics.open_span {
+            if matches!(kind, PhaseKind::Queue | PhaseKind::Preempted) {
+                st.metrics.queue_delay += t - start;
+            }
+        }
+        st.enqueued_wall = t;
+        st.metrics.span_begin(PhaseKind::Queue, t);
+        let predicted = st.predicted;
+        self.audit_ev(t, AuditEvent::Enqueued { traj: i, worker: w });
+        self.req_seq += 1;
+        let req = StepRequest {
+            traj_id: i,
+            predicted_len: predicted,
+            seq: self.req_seq,
+            first_seq: i as u64,
+        };
+        self.control.router.on_enter(w);
+        self.queued_ct[w] += 1;
+        self.send(w, Cmd::Enqueue { req, log: self.trajs[i].log.clone() })
+    }
+
+    /// Admission/preemption pass over every live worker with queued
+    /// work; processes decisions in worker order.
+    fn schedule_all(&mut self) -> anyhow::Result<()> {
+        let targets: Vec<usize> = (0..self.links.len())
+            .filter(|&w| !self.crashed[w] && self.queued_ct[w] > 0)
+            .collect();
+        for &w in &targets {
+            self.send(w, Cmd::Schedule { degraded: self.degraded })?;
+        }
+        for &w in &targets {
+            let Reply::Sched(events) = self.recv(w)? else {
+                anyhow::bail!("worker {w}: expected Sched reply");
+            };
+            for ev in events {
+                match ev {
+                    SchedEvent::Admitted {
+                        traj: i,
+                        prefill_dt,
+                        prefill_tokens,
+                        prefilled_before,
+                        prefilled_after,
+                    } => {
+                        let t = self.now();
+                        let st = &mut self.trajs[i];
+                        // The prefill ran on the worker just before the
+                        // reply: back-date the queue/prefill boundary so
+                        // its wall time lands in gpu_time, not queueing.
+                        let t_q = (t - prefill_dt).max(st.enqueued_wall);
+                        st.metrics.queue_delay += t_q - st.enqueued_wall;
+                        if prefill_tokens > 0 {
+                            st.metrics.span_begin(PhaseKind::Prefill, t_q);
+                            st.metrics.gpu_time += t - t_q;
+                            st.metrics.span_begin(PhaseKind::Decode, t);
+                        } else {
+                            st.metrics.span_begin(PhaseKind::Decode, t_q);
+                        }
+                        if prefilled_before == 0 && st.step > 0 {
+                            st.metrics.recomputed_tokens += prefill_tokens;
+                        }
+                        st.phase = Phase::Running;
+                        st.worker = Some(w);
+                        st.kv_home = Some(w);
+                        st.kv_tokens = prefilled_after;
+                        self.queued_ct[w] -= 1;
+                        self.active_ct[w] += 1;
+                        self.control.router.set_cache(i, w, prefilled_after);
+                        self.audit_ev(
+                            t,
+                            AuditEvent::Admitted { traj: i, worker: w },
+                        );
+                    }
+                    SchedEvent::Preempted { victim, kv_tokens } => {
+                        let t = self.now();
+                        let st = &mut self.trajs[victim];
+                        st.phase = Phase::Queued;
+                        st.enqueued_wall = t;
+                        st.metrics.preemptions += 1;
+                        st.metrics.span_begin(PhaseKind::Preempted, t);
+                        st.kv_home = Some(w);
+                        st.kv_tokens = kv_tokens;
+                        self.active_ct[w] -= 1;
+                        self.queued_ct[w] += 1;
+                        self.audit_ev(
+                            t,
+                            AuditEvent::Preempted {
+                                traj: victim,
+                                worker: w,
+                                kv_tokens,
+                            },
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One decode round: every live, non-striding worker with active
+    /// trajectories decodes one token per slot.
+    fn decode_round(&mut self) -> anyhow::Result<()> {
+        let parts: Vec<usize> = (0..self.links.len())
+            .filter(|&w| {
+                !self.crashed[w]
+                    && self.active_ct[w] > 0
+                    && self.round % self.stride[w] == 0
+            })
+            .collect();
+        for &w in &parts {
+            self.send(w, Cmd::Decode)?;
+        }
+        // Drain every reply before acting on segment completions:
+        // `finish_segment` can issue a synchronous `MigrateOut` to a
+        // worker that still owes its `Decoded` reply, which would
+        // interleave the two request/reply exchanges.
+        let mut finished: Vec<(usize, usize)> = Vec::new();
+        for &w in &parts {
+            let Reply::Decoded { results, dt } = self.recv(w)? else {
+                anyhow::bail!("worker {w}: expected Decoded reply");
+            };
+            let batch = results.len().max(1);
+            for &(i, tok) in &results {
+                let st = &mut self.trajs[i];
+                st.log.push(tok);
+                st.kv_tokens += 1;
+                st.seg_done += 1;
+                st.metrics.tokens_generated += 1;
+                st.metrics.gpu_time += dt / batch as f64;
+            }
+            for &(i, _) in &results {
+                let seg_len =
+                    self.specs[i].steps[self.trajs[i].step].gen_tokens;
+                if self.trajs[i].seg_done >= seg_len {
+                    finished.push((w, i));
+                }
+            }
+        }
+        for (w, i) in finished {
+            self.finish_segment(w, i)?;
+        }
+        Ok(())
+    }
+
+    /// A trajectory finished its generation segment on `w` (mirrors
+    /// `Simulator::finish_segment`).
+    fn finish_segment(&mut self, w: usize, i: usize) -> anyhow::Result<()> {
+        self.send(w, Cmd::Deactivate { traj: i })?;
+        self.active_ct[w] -= 1;
+        self.control.router.on_leave(w);
+        let t = self.now();
+        let kv_tokens = self.trajs[i].kv_tokens;
+        self.control.router.set_cache(i, w, kv_tokens);
+        {
+            let st = &mut self.trajs[i];
+            st.seg_done = 0;
+            st.metrics.steps += 1;
+            st.worker = None;
+            st.kv_home = Some(w);
+        }
+        let step = self.trajs[i].step;
+        let last = step + 1 >= self.specs[i].n_steps();
+        if last {
+            let st = &mut self.trajs[i];
+            st.phase = Phase::Done;
+            st.metrics.finish_time = t;
+            st.metrics.span_close(t);
+            self.done += 1;
+            self.send(w, Cmd::Drop { traj: i })?;
+            self.audit_ev(t, AuditEvent::Completed { traj: i, worker: w });
+            return Ok(());
+        }
+        {
+            let st = &mut self.trajs[i];
+            st.step = step + 1;
+            st.phase = Phase::ToolWait;
+            st.tool_step = step;
+            st.tool_lat = self.specs[i].steps[step].tool_latency.max(1e-4);
+            st.tool_attempts = 0;
+            st.wait_started_wall = t;
+            st.metrics.span_begin(PhaseKind::ToolWait, t);
+        }
+        self.audit_ev(t, AuditEvent::ToolWait { traj: i, worker: w, step });
+        let pred = self.control.refresh_prediction(&self.specs[i], step + 1);
+        self.trajs[i].predicted = pred;
+        self.start_tool_attempt(i);
+        // Opportunistic migration during the tool window (§5.3).
+        if self.cfg.policy.migration {
+            let active: Vec<(usize, f64, usize)> = self
+                .trajs
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| {
+                    !matches!(t.phase, Phase::Done | Phase::Failed)
+                })
+                .map(|(tid, t)| (tid, t.predicted, t.kv_home.unwrap_or(0)))
+                .collect();
+            if let Some(req) =
+                self.control.check_migration(i, pred, kv_tokens, &active)
+            {
+                self.control.transmissions.submit(req);
+            }
+            self.pump_migrations()?;
+        }
+        Ok(())
+    }
+
+    /// Launch tool attempt `tool_attempts` for `traj` on the virtual
+    /// clock (mirrors `Simulator::start_tool_attempt`).
+    fn start_tool_attempt(&mut self, i: usize) {
+        let (step, lat, attempt) = {
+            let st = &self.trajs[i];
+            (st.tool_step, st.tool_lat, st.tool_attempts)
+        };
+        let domain = self.specs[i].domain;
+        let (outcome, cold_mult) = match self.faults.as_mut() {
+            Some(p) => (
+                p.tool_outcome(i, step, attempt),
+                p.cold_multiplier(i, step, attempt),
+            ),
+            None => (ToolOutcome::Ok, 1.0),
+        };
+        let vt = self.vt;
+        let deadline = match outcome {
+            ToolOutcome::Ok => {
+                let inv = self.tools.invoke_spiked(domain, vt, lat, cold_mult);
+                if cold_mult > 1.0 && inv.cold {
+                    if let Some(s) = self.stats_mut() {
+                        s.cold_spikes += 1;
+                    }
+                }
+                inv.finish
+            }
+            ToolOutcome::Fail => {
+                // The failed attempt occupies the FaaS substrate for its
+                // full duration; the error only surfaces at the end.
+                let inv = self.tools.invoke_spiked(domain, vt, lat, cold_mult);
+                self.trajs[i].faulted = true;
+                inv.finish
+            }
+            ToolOutcome::Hang => {
+                // Silent backend: only the caller-side deadline ends it.
+                let d = self.cfg.fault.tool_deadline;
+                let _ = self.tools.invoke_spiked(domain, vt, d, cold_mult);
+                self.trajs[i].faulted = true;
+                vt + d
+            }
+        };
+        let st = &mut self.trajs[i];
+        st.tool_outcome = outcome;
+        st.tool_state = ToolState::Waiting;
+        st.tool_deadline_vt = deadline;
+    }
+
+    /// Resolve tool attempts and backoffs due at the current `vt`, in
+    /// trajectory index order.
+    fn pump_tools(&mut self) -> anyhow::Result<()> {
+        for i in 0..self.trajs.len() {
+            match self.trajs[i].tool_state {
+                ToolState::Waiting
+                    if self.trajs[i].tool_deadline_vt <= self.vt =>
+                {
+                    self.trajs[i].tool_state = ToolState::Idle;
+                    if self.trajs[i].tool_outcome == ToolOutcome::Ok {
+                        self.on_tool_done(i)?;
+                    } else {
+                        self.on_tool_failed(i)?;
+                    }
+                }
+                ToolState::BackingOff
+                    if self.trajs[i].retry_at_vt <= self.vt =>
+                {
+                    self.trajs[i].tool_state = ToolState::Idle;
+                    self.start_tool_attempt(i);
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn on_tool_done(&mut self, i: usize) -> anyhow::Result<()> {
+        let t = self.now();
+        self.audit_ev(t, AuditEvent::ToolDone { traj: i });
+        // The wait really lasted until the control plane observed it.
+        self.trajs[i].metrics.tool_time +=
+            t - self.trajs[i].wait_started_wall;
+        // Append the tool's output tokens to the context log.
+        let prev = self.trajs[i].tool_step;
+        let n_out = self.specs[i].steps[prev].tool_output_tokens;
+        let base = self.trajs[i].log.len();
+        for p in 0..n_out {
+            let tok =
+                synth_token(self.cfg.seed ^ 0x700_1, i, base + p, self.vocab);
+            self.trajs[i].log.push(tok);
+        }
+        if let Some(w) = self.trajs[i].kv_home {
+            let kv = self.trajs[i].kv_tokens;
+            self.control.router.set_cache(i, w, kv);
+        }
+        if self.trajs[i].migrating {
+            // Exposed migration overhead: the step waits for the KV.
+            self.trajs[i].phase = Phase::MigrationWait;
+            self.trajs[i].metrics.span_begin(PhaseKind::MigrationWait, t);
+            return Ok(());
+        }
+        self.enqueue_step(i, t)
+    }
+
+    fn on_tool_failed(&mut self, i: usize) -> anyhow::Result<()> {
+        let attempt = self.trajs[i].tool_attempts + 1;
+        self.trajs[i].tool_attempts = attempt;
+        self.trajs[i].faulted = true;
+        if attempt > self.cfg.fault.retry.max_retries {
+            if let Some(s) = self.stats_mut() {
+                s.retry_exhausted += 1;
+            }
+            let t = self.now();
+            self.trajs[i].metrics.tool_time +=
+                t - self.trajs[i].wait_started_wall;
+            return self.fail_trajectory(i, t, FailReason::RetryBudget);
+        }
+        let step = self.trajs[i].tool_step;
+        let delay = self
+            .faults
+            .as_ref()
+            .map(|p| p.backoff(i, step, attempt))
+            .unwrap_or(0.0);
+        if let Some(s) = self.stats_mut() {
+            s.retries += 1;
+        }
+        let t = self.now();
+        self.audit_ev(
+            t,
+            AuditEvent::ToolRetry { traj: i, attempt: attempt as usize },
+        );
+        // Backoff stays inside the ToolWait span; tool_time is charged
+        // once, on resolution, from wall time.
+        self.trajs[i].tool_state = ToolState::BackingOff;
+        self.trajs[i].retry_at_vt = self.vt + delay;
+        Ok(())
+    }
+
+    /// Terminally fail `traj` at wall time `t` (mirrors
+    /// `Simulator::fail_trajectory`): deferred while a KV transfer is in
+    /// flight so migration exclusivity stays intact.
+    fn fail_trajectory(
+        &mut self,
+        i: usize,
+        t: f64,
+        reason: FailReason,
+    ) -> anyhow::Result<()> {
+        if self.trajs[i].migrating {
+            self.trajs[i].pending_fail = true;
+            self.trajs[i].metrics.span_begin(PhaseKind::MigrationWait, t);
+            return Ok(());
+        }
+        if let Some(w) = self.trajs[i].kv_home {
+            if !self.crashed[w] {
+                self.send(w, Cmd::Drop { traj: i })?;
+            }
+        }
+        {
+            let st = &mut self.trajs[i];
+            st.phase = Phase::Failed;
+            st.pending_fail = false;
+            st.worker = None;
+            st.kv_home = None;
+            st.kv_tokens = 0;
+            st.metrics.finish_time = t;
+            st.metrics.span_close(t);
+        }
+        self.control.router.evict_cache(i);
+        self.control.transmissions.cancel(i);
+        if let Some(s) = self.stats_mut() {
+            s.failed += 1;
+        }
+        self.done += 1;
+        self.audit_ev(t, AuditEvent::Failed { traj: i, reason });
+        Ok(())
+    }
+
+    /// Launch admissible KV transfers: pull the KV off the source
+    /// worker and park it in flight until `vt` reaches the transfer
+    /// completion (mirrors `Simulator::pump_migrations`).
+    fn pump_migrations(&mut self) -> anyhow::Result<()> {
+        let batch = self.control.transmissions.next_batch();
+        for req in batch {
+            let i = req.traj_id;
+            // A request can go stale between submit and launch: the
+            // trajectory resumed decoding, failed, or already migrated.
+            // (The simulator's KV is virtual so a stale launch is
+            // harmless there; with real buffers it must be dropped.)
+            let launchable = self.trajs[i].phase == Phase::ToolWait
+                && !self.trajs[i].migrating
+                && self.trajs[i].kv_home == Some(req.src_worker);
+            if !launchable {
+                self.control.transmissions.complete(&req);
+                continue;
+            }
+            let t_mig = Instant::now();
+            self.send(req.src_worker, Cmd::MigrateOut { traj: i })?;
+            let Reply::KvOut { kv, log, prefilled } =
+                self.recv(req.src_worker)?
+            else {
+                anyhow::bail!(
+                    "worker {}: expected KvOut reply",
+                    req.src_worker
+                );
+            };
+            self.migration_us.push(t_mig.elapsed().as_secs_f64() * 1e6);
+            self.migrated_bytes += kv.bytes();
+            let dur = req.transfer_time(
+                self.sim_cfg.cluster.migration_bandwidth,
+                self.sim_cfg.cluster.migration_latency,
+            );
+            self.trajs[i].metrics.migration_seconds += dur;
+            self.trajs[i].migrating = true;
+            let t = self.now();
+            self.audit_ev(
+                t,
+                AuditEvent::MigrationStarted {
+                    traj: i,
+                    src: req.src_worker,
+                    dst: req.dst_worker,
+                },
+            );
+            self.mig_seq += 1;
+            self.mig_buf.insert(self.mig_seq, (kv, log, prefilled));
+            self.inflight.push((self.mig_seq, req, self.vt + dur));
+        }
+        Ok(())
+    }
+
+    /// Land transfers whose virtual completion time has passed, in
+    /// (completion, id) order.
+    fn pump_migration_completions(&mut self) -> anyhow::Result<()> {
+        loop {
+            let due = self
+                .inflight
+                .iter()
+                .enumerate()
+                .filter(|(_, (_, _, dv))| *dv <= self.vt)
+                .min_by(|a, b| {
+                    a.1 .2.total_cmp(&b.1 .2).then(a.1 .0.cmp(&b.1 .0))
+                })
+                .map(|(idx, _)| idx);
+            let Some(idx) = due else { break };
+            let (id, req, _) = self.inflight.remove(idx);
+            self.control.transmissions.complete(&req);
+            let (kv, log, prefilled) =
+                self.mig_buf.remove(&id).expect("in-flight KV buffered");
+            let i = req.traj_id;
+            self.send(
+                req.dst_worker,
+                Cmd::MigrateIn { traj: i, kv, log, prefilled },
+            )?;
+            let t = self.now();
+            self.audit_ev(
+                t,
+                AuditEvent::Migrated {
+                    traj: i,
+                    src: req.src_worker,
+                    dst: req.dst_worker,
+                },
+            );
+            {
+                let st = &mut self.trajs[i];
+                st.migrating = false;
+                st.kv_home = Some(req.dst_worker);
+                st.kv_tokens = prefilled;
+                st.metrics.migrations += 1;
+            }
+            self.control.router.reassign(i, req.dst_worker);
+            self.control.router.set_cache(i, req.dst_worker, prefilled);
+            if self.trajs[i].pending_fail {
+                self.fail_trajectory(i, t, FailReason::RetryBudget)?;
+            } else if self.trajs[i].phase == Phase::MigrationWait {
+                self.enqueue_step(i, t)?;
+            }
+            self.pump_migrations()?;
+        }
+        Ok(())
+    }
+
+    /// Fire every scheduled crash due at `vt`; returns the torn-down
+    /// workers so the caller can join their threads.
+    fn fire_due_crashes(&mut self) -> anyhow::Result<Vec<usize>> {
+        let mut fired = Vec::new();
+        while self.crash_next < self.crash_plan.len()
+            && self.crash_plan[self.crash_next].0 <= self.vt
+        {
+            let w = self.crash_plan[self.crash_next].1;
+            self.crash_next += 1;
+            if self.crashed[w] {
+                continue;
+            }
+            // Never crash the last survivor: the fault model assumes
+            // the cluster retains capacity to finish the episode.
+            if self.crashed.iter().filter(|c| !**c).count() <= 1 {
+                continue;
+            }
+            self.crash_worker(w)?;
+            fired.push(w);
+        }
+        Ok(fired)
+    }
+
+    /// `worker` crashes now: tear the thread down, displace every
+    /// residency, abort transfers touching it, fence the control plane,
+    /// and re-place on the survivors (mirrors
+    /// `Simulator::on_worker_crash` step for step).
+    fn crash_worker(&mut self, w: usize) -> anyhow::Result<()> {
+        // Thread teardown: queue, active set, and every resident KV die
+        // with the worker. The caller joins the handle.
+        let _ = self.links[w].tx.send(Cmd::Crash);
+        self.crashed[w] = true;
+        if let Some(s) = self.stats_mut() {
+            s.worker_crashes += 1;
+        }
+        let t = self.now();
+        self.audit_ev(t, AuditEvent::WorkerCrashed { worker: w });
+        if !self.degraded {
+            // Sticky: later crashes keep the same single capacity cut.
+            self.degraded = true;
+            self.audit_ev(t, AuditEvent::Degraded { on: true });
+        }
+
+        let displace_kv = |st: &mut CTraj| {
+            st.worker = None;
+            if st.kv_home == Some(w) {
+                st.kv_home = None;
+                st.kv_tokens = 0;
+            }
+        };
+
+        // 1. Displace the active set (the slots die with the worker).
+        let mut displaced: Vec<usize> = Vec::new();
+        let mut active_ids: Vec<usize> = self
+            .trajs
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                t.phase == Phase::Running && t.worker == Some(w)
+            })
+            .map(|(id, _)| id)
+            .collect();
+        active_ids.sort_unstable();
+        for id in active_ids {
+            self.control.router.on_leave(w);
+            self.audit_ev(t, AuditEvent::Displaced { traj: id, worker: w });
+            displace_kv(&mut self.trajs[id]);
+            displaced.push(id);
+        }
+        // 2. Displace queued step requests.
+        let queued: Vec<usize> = self
+            .trajs
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.phase == Phase::Queued && t.worker == Some(w))
+            .map(|(id, _)| id)
+            .collect();
+        for id in queued {
+            self.control.router.on_leave(w);
+            self.audit_ev(t, AuditEvent::Displaced { traj: id, worker: w });
+            displace_kv(&mut self.trajs[id]);
+            displaced.push(id);
+        }
+        // 3. Tool-parked trajectories whose only residency here is the
+        //    KV prefix: tear it down (full recompute at re-admission).
+        let parked: Vec<usize> = self
+            .trajs
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                matches!(t.phase, Phase::ToolWait | Phase::MigrationWait)
+                    && t.kv_home == Some(w)
+            })
+            .map(|(id, _)| id)
+            .collect();
+        for id in parked {
+            self.audit_ev(t, AuditEvent::Displaced { traj: id, worker: w });
+            displace_kv(&mut self.trajs[id]);
+            self.trajs[id].faulted = true;
+            if let Some(s) = self.stats_mut() {
+                s.displaced += 1;
+            }
+        }
+        // 4. Abort in-flight KV transfers touching the dead worker.
+        let (dead, keep): (Vec<_>, Vec<_>) =
+            self.inflight.drain(..).partition(|(_, r, _)| {
+                r.src_worker == w || r.dst_worker == w
+            });
+        self.inflight = keep;
+        let mut resume: Vec<usize> = Vec::new();
+        for (id, req, _) in dead {
+            self.control.transmissions.complete(&req);
+            let (kv, log, prefilled) =
+                self.mig_buf.remove(&id).expect("aborted KV buffered");
+            let i = req.traj_id;
+            self.trajs[i].migrating = false;
+            self.audit_ev(
+                t,
+                AuditEvent::MigrationAborted {
+                    traj: i,
+                    src: req.src_worker,
+                    dst: req.dst_worker,
+                },
+            );
+            if req.dst_worker == w && self.trajs[i].kv_home == Some(req.src_worker)
+            {
+                // Destination died: the source copy is still good —
+                // put the buffered KV back where it came from.
+                self.send(
+                    req.src_worker,
+                    Cmd::MigrateIn { traj: i, kv, log, prefilled },
+                )?;
+            }
+            // Source died: the buffer is the only copy of a residency
+            // the crash destroyed; drop it (step 3 displaced the
+            // trajectory already).
+            if self.trajs[i].pending_fail {
+                self.fail_trajectory(i, t, FailReason::RetryBudget)?;
+            } else if self.trajs[i].phase == Phase::MigrationWait {
+                resume.push(i);
+            }
+        }
+        // 5. Fence the control plane (mark dead, evict caches,
+        //    reassign, cancel pending transfers).
+        self.control.on_worker_crash(w);
+        self.active_ct[w] = 0;
+        self.queued_ct[w] = 0;
+
+        // 6. Re-place everything that lost its execution residency.
+        if let Some(s) = self.stats_mut() {
+            s.displaced += displaced.len();
+        }
+        for id in displaced {
+            self.trajs[id].faulted = true;
+            self.enqueue_step(id, t)?;
+        }
+        resume.sort_unstable();
+        for id in resume {
+            self.trajs[id].faulted = true;
+            self.enqueue_step(id, t)?;
+        }
+        Ok(())
+    }
+
+    /// Advance the virtual clock: one `round_dt` tick while any worker
+    /// is decoding, otherwise jump to the next pending virtual event.
+    fn advance_clock(&mut self) -> anyhow::Result<()> {
+        let any_active = (0..self.links.len())
+            .any(|w| !self.crashed[w] && self.active_ct[w] > 0);
+        if any_active {
+            self.vt += self.round_dt;
+            self.round += 1;
+            return Ok(());
+        }
+        let mut next = f64::INFINITY;
+        for st in &self.trajs {
+            match st.tool_state {
+                ToolState::Waiting => next = next.min(st.tool_deadline_vt),
+                ToolState::BackingOff => next = next.min(st.retry_at_vt),
+                ToolState::Idle => {}
+            }
+        }
+        for (_, _, dv) in &self.inflight {
+            next = next.min(*dv);
+        }
+        if self.crash_next < self.crash_plan.len() {
+            next = next.min(self.crash_plan[self.crash_next].0);
+        }
+        anyhow::ensure!(
+            next.is_finite(),
+            "serve stalled: no active work and no pending virtual events \
+             ({}/{} done)",
+            self.done,
+            self.trajs.len()
+        );
+        self.vt = self.vt.max(next);
+        Ok(())
+    }
+}
+
+/// Run one rollout batch on per-worker threads over the `Send`-safe
+/// stub engine. Semantics mirror [`super::serve_rollout_single`] plus
+/// the three cluster fault classes (crashes, stragglers, cold spikes).
+pub fn serve_rollout_threaded(
+    engine: &Engine,
+    cfg: &ServeConfig,
+    history: &[TrajectorySpec],
+    specs: &[TrajectorySpec],
+) -> anyhow::Result<ServeOutcome> {
+    let max_seq = engine.manifest.model.max_seq;
+    let vocab = engine.manifest.model.vocab;
+    let specs: Vec<TrajectorySpec> = specs
+        .iter()
+        .map(|s| fit_to_ring(s, max_seq, cfg.token_scale))
+        .collect();
+
+    let mut sim_cfg = SimConfig::default();
+    sim_cfg.cluster.n_gpus = cfg.n_workers;
+    sim_cfg.cluster.mp_degrees = vec![1];
+    sim_cfg.cluster.max_batch_per_worker = cfg.max_batch;
+    sim_cfg.model = crate::config::ModelCost::mini();
+    sim_cfg.policy = cfg.policy;
+    sim_cfg.policy.resource = ResourceKind::Fixed(1);
+    sim_cfg.seed = cfg.seed;
+    let mut control = ControlPlane::new(&sim_cfg, history, &specs);
+    let n_workers = control.n_workers();
+    let faults: Option<FaultPlan> = cfg
+        .fault
+        .enabled
+        .then(|| FaultPlan::new(&cfg.fault, n_workers));
+
+    // Crash schedule and straggler strides come from the plan up front.
+    let mut crash_plan: Vec<(f64, usize)> = Vec::new();
+    let mut stride = vec![1u64; n_workers];
+    if let Some(p) = faults.as_ref() {
+        for (w, s) in stride.iter_mut().enumerate() {
+            *s = (p.slowdown(w).ceil() as u64).max(1);
+            let ct = p.crash_time(w);
+            if ct.is_finite() {
+                crash_plan.push((ct, w));
+            }
+        }
+        crash_plan
+            .sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    }
+
+    let mut auditor = if cfg.audit || cfg!(debug_assertions) {
+        let mut a = Auditor::new();
+        a.set_worker_slots(vec![cfg.max_batch; n_workers]);
+        control.audit_provision(&mut a, 0.0);
+        for (i, s) in specs.iter().enumerate() {
+            if let Some(w) = control.router.assigned_worker(s.id) {
+                a.record(0.0, AuditEvent::Placed { traj: i, worker: w });
+            }
+        }
+        Some(a)
+    } else {
+        None
+    };
+
+    let trajs: Vec<CTraj> = specs
+        .iter()
+        .map(|s| CTraj {
+            phase: Phase::Queued,
+            step: 0,
+            seg_done: 0,
+            log: (0..s.prompt_tokens)
+                .map(|p| synth_token(cfg.seed, s.id, p, vocab))
+                .collect(),
+            worker: None,
+            kv_home: None,
+            kv_tokens: 0,
+            migrating: false,
+            pending_fail: false,
+            tool_state: ToolState::Idle,
+            tool_outcome: ToolOutcome::Ok,
+            tool_deadline_vt: 0.0,
+            retry_at_vt: 0.0,
+            tool_step: 0,
+            tool_lat: 0.0,
+            tool_attempts: 0,
+            faulted: false,
+            enqueued_wall: 0.0,
+            wait_started_wall: 0.0,
+            predicted: 0.0,
+            metrics: TrajectoryMetrics { id: s.id, ..Default::default() },
+        })
+        .collect();
+    let n = trajs.len();
+    let round_dt = sim_cfg.model.token_time(1, 1);
+
+    std::thread::scope(|scope| -> anyhow::Result<ServeOutcome> {
+        let mut links = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (ctx, crx) = channel::<Cmd>();
+            let (rtx, rrx) = channel::<Reply>();
+            let wcfg = WorkerCfg {
+                scheduler: cfg.policy.scheduler,
+                max_batch: cfg.max_batch,
+                preemption: cfg.policy.preemption,
+                temperature: cfg.temperature,
+                top_p: cfg.top_p,
+                sample_seed: cfg.seed
+                    ^ 0xfeed
+                    ^ (w as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            };
+            handles.push(Some(
+                scope.spawn(move || worker_main(engine, wcfg, crx, rtx)),
+            ));
+            links.push(Link { tx: ctx, rx: rrx });
+        }
+        let mut ctl = Ctl {
+            cfg,
+            specs: &specs,
+            sim_cfg,
+            control,
+            auditor: auditor.take(),
+            faults,
+            tools: ToolManager::new(FaasConfig::default()),
+            trajs,
+            links,
+            crashed: vec![false; n_workers],
+            crash_plan,
+            crash_next: 0,
+            degraded: false,
+            vt: 0.0,
+            round: 0,
+            round_dt,
+            stride,
+            t0: Instant::now(),
+            req_seq: 0,
+            done: 0,
+            inflight: Vec::new(),
+            mig_buf: HashMap::new(),
+            mig_seq: 0,
+            migrated_bytes: 0,
+            migration_us: Vec::new(),
+            active_ct: vec![0; n_workers],
+            queued_ct: vec![0; n_workers],
+            vocab,
+        };
+
+        // Initial submissions.
+        for i in 0..n {
+            ctl.trajs[i].predicted =
+                ctl.control.refresh_prediction(&specs[i], 0);
+        }
+        for i in 0..n {
+            // One timestamp for submit, the audit event, and the Queue
+            // span: `check_spans` requires the first span to start at
+            // `submit_time` exactly.
+            let t = ctl.now();
+            ctl.trajs[i].metrics.submit_time = t;
+            ctl.audit_ev(t, AuditEvent::Submitted { traj: i });
+            ctl.enqueue_step(i, t)?;
+        }
+
+        let mut guard = 0u64;
+        while ctl.done < n {
+            guard += 1;
+            anyhow::ensure!(
+                guard < 50_000_000,
+                "serve loop guard tripped ({}/{n} done)",
+                ctl.done
+            );
+            for w in ctl.fire_due_crashes()? {
+                if let Some(h) = handles[w].take() {
+                    h.join().map_err(|_| {
+                        anyhow::anyhow!("worker {w} panicked")
+                    })?;
+                }
+            }
+            ctl.pump_migration_completions()?;
+            ctl.pump_tools()?;
+            if ctl.done >= n {
+                break;
+            }
+            ctl.schedule_all()?;
+            ctl.decode_round()?;
+            if ctl.done >= n {
+                break;
+            }
+            ctl.advance_clock()?;
+        }
+
+        for w in 0..n_workers {
+            if !ctl.crashed[w] {
+                let _ = ctl.links[w].tx.send(Cmd::Shutdown);
+            }
+        }
+        drop(std::mem::take(&mut ctl.links));
+        for h in handles.iter_mut().filter_map(Option::take) {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("a worker thread panicked"))?;
+        }
+
+        let wall = ctl.now();
+        let tokens: usize =
+            ctl.trajs.iter().map(|t| t.metrics.tokens_generated).sum();
+        let mean_mig = if ctl.migration_us.is_empty() {
+            0.0
+        } else {
+            ctl.migration_us.iter().sum::<f64>()
+                / ctl.migration_us.len() as f64
+        };
+        let fault_stats = match ctl.faults.as_mut() {
+            Some(p) => {
+                p.stats_mut().recovered = ctl
+                    .trajs
+                    .iter()
+                    .filter(|t| t.faulted && t.phase == Phase::Done)
+                    .count();
+                *p.stats()
+            }
+            None => FaultStats::default(),
+        };
+        let report = RolloutReport::from_trajectories(
+            ctl.trajs.into_iter().map(|t| t.metrics).collect(),
+        );
+        let mut auditor = ctl.auditor;
+        if let Some(a) = auditor.as_mut() {
+            a.check_complete(wall);
+            // `gpu_exact = false`: Decode spans cover residency wall
+            // time while gpu_time charges the per-batch share.
+            a.check_spans(&report, 1e-6, false);
+            if cfg!(debug_assertions) {
+                a.assert_clean("serve-threaded");
+            }
+        }
+        Ok(ServeOutcome {
+            run: RunOutput {
+                report,
+                audit: auditor,
+                faults: fault_stats,
+                faults_enabled: cfg.fault.enabled,
+                determinism_decisions: None,
+            },
+            wall_seconds: wall,
+            tokens_generated: tokens,
+            migrated_bytes: ctl.migrated_bytes,
+            mean_migration_us: mean_mig,
+        })
+    })
+}

@@ -4,6 +4,15 @@
 //! a failure reports the exact seed so the case can be replayed by name.
 //! A light "shrinking" pass retries the failing seed with progressively
 //! smaller size hints, reporting the smallest size that still fails.
+//!
+//! # Replaying a failure
+//!
+//! Every failure panic ends with a ready-to-paste repro command. Setting
+//! `HEDDLE_PROP_SEED='<name>=<seed>@<size>'` re-runs *only* the named
+//! property at exactly that seed and size (seed in decimal or `0x` hex);
+//! properties with a different name ignore the variable and run their
+//! normal sweep, so the whole test suite can stay enabled while one
+//! case is debugged.
 
 use crate::util::rng::Rng;
 
@@ -21,13 +30,58 @@ impl Gen {
     }
 }
 
+/// Parse a `HEDDLE_PROP_SEED` spec (`<name>=<seed>@<size>`) against a
+/// property name. Returns the (seed, size) to replay only when the name
+/// matches exactly; malformed specs and other properties get `None`.
+fn parse_replay(spec: &str, name: &str) -> Option<(u64, usize)> {
+    let (prop, rest) = spec.split_once('=')?;
+    if prop.trim() != name {
+        return None;
+    }
+    let (seed_s, size_s) = rest.split_once('@')?;
+    let seed_s = seed_s.trim();
+    let seed = match seed_s.strip_prefix("0x").or_else(|| seed_s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok()?,
+        None => seed_s.parse().ok()?,
+    };
+    let size = size_s.trim().parse().ok()?;
+    Some((seed, size))
+}
+
 /// Run a property over `cases` random cases. The property returns
-/// `Err(msg)` to signal failure. Panics (test failure) with the seed and
-/// minimal failing size.
-pub fn check<F>(name: &str, cases: usize, mut prop: F)
+/// `Err(msg)` to signal failure. Panics (test failure) with the seed,
+/// the minimal failing size, and a `HEDDLE_PROP_SEED` repro command;
+/// when that variable names this property, only the pinned seed/size
+/// runs (see the module docs).
+pub fn check<F>(name: &str, cases: usize, prop: F)
 where
     F: FnMut(Gen) -> Result<(), String>,
 {
+    let replay = std::env::var("HEDDLE_PROP_SEED")
+        .ok()
+        .and_then(|spec| parse_replay(&spec, name));
+    check_inner(name, cases, replay, prop)
+}
+
+fn check_inner<F>(
+    name: &str,
+    cases: usize,
+    replay: Option<(u64, usize)>,
+    mut prop: F,
+) where
+    F: FnMut(Gen) -> Result<(), String>,
+{
+    if let Some((seed, size)) = replay {
+        if let Err(msg) = prop(Gen { rng: seed, size }) {
+            panic!(
+                "property '{name}' failed on replay (seed {seed:#x}, \
+                 size {size}): {msg}\n\
+                 replay: HEDDLE_PROP_SEED='{name}={seed:#x}@{size}' \
+                 cargo test -q"
+            );
+        }
+        return;
+    }
     // Seed derives from the property name so adding properties does not
     // reshuffle the cases of the others.
     let base = name
@@ -51,7 +105,9 @@ where
             }
             panic!(
                 "property '{name}' failed (case {case}, seed {seed:#x}, \
-                 min size {min_size}): {min_msg}"
+                 min size {min_size}): {min_msg}\n\
+                 replay: HEDDLE_PROP_SEED='{name}={seed:#x}@{min_size}' \
+                 cargo test -q"
             );
         }
     }
@@ -99,5 +155,52 @@ mod tests {
             Ok(())
         });
         assert!(seen.len() > 10, "expected a spread of sizes: {seen:?}");
+    }
+
+    #[test]
+    fn parse_replay_accepts_hex_and_decimal() {
+        assert_eq!(
+            parse_replay("my_prop=0xdeadbeef@7", "my_prop"),
+            Some((0xdeadbeef, 7))
+        );
+        assert_eq!(parse_replay("my_prop=42@3", "my_prop"), Some((42, 3)));
+        // Whitespace around the fields is tolerated.
+        assert_eq!(
+            parse_replay("my_prop = 0XABC @ 12 ", "my_prop"),
+            Some((0xabc, 12))
+        );
+    }
+
+    #[test]
+    fn parse_replay_ignores_other_properties_and_garbage() {
+        assert_eq!(parse_replay("other=1@2", "my_prop"), None);
+        assert_eq!(parse_replay("my_prop=1", "my_prop"), None);
+        assert_eq!(parse_replay("my_prop=zzz@2", "my_prop"), None);
+        assert_eq!(parse_replay("my_prop=1@big", "my_prop"), None);
+        assert_eq!(parse_replay("", "my_prop"), None);
+    }
+
+    #[test]
+    fn replay_runs_exactly_the_pinned_case() {
+        let mut calls = Vec::new();
+        check_inner("pinned", 50, Some((0x1234, 9)), |g| {
+            calls.push((g.rng, g.size));
+            Ok(())
+        });
+        assert_eq!(calls, vec![(0x1234, 9)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "HEDDLE_PROP_SEED='pinned_fail=0x7@4'")]
+    fn replay_failure_reports_repro_command() {
+        check_inner("pinned_fail", 50, Some((0x7, 4)), |_| {
+            Err("still broken".into())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay: HEDDLE_PROP_SEED='sweep_fail=")]
+    fn sweep_failure_includes_repro_command() {
+        check_inner("sweep_fail", 3, None, |_| Err("nope".into()));
     }
 }

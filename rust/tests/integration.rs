@@ -476,6 +476,459 @@ fn serve_synthetic_spans_satisfy_wall_clock_contract() {
     }
 }
 
+// ---- sim-vs-serve fault parity (threaded stub backend) -----------------
+
+/// The serving path's threaded backend injects the same five fault
+/// classes as the simulator, driven by the same plan-pure
+/// `FaultPlan`. These tests hold the two paths against each other:
+/// identical fault-injection decision counts, identical terminal-failure
+/// sets, and conservation on both sides for the same workload, policy,
+/// and fault seed.
+#[cfg(not(feature = "pjrt"))]
+mod serve_fault_parity {
+    use super::*;
+    use heddle::audit::{AuditEvent, Auditor};
+    use heddle::config::ResourceKind;
+    use heddle::fault::{FaultConfig, FaultPlan};
+    use heddle::harness::ServeRun;
+    use heddle::serve::{fit_to_ring, serve_rollout, ServeConfig};
+    use heddle::workload::{StepSpec, TrajectorySpec};
+    use std::collections::{BTreeSet, HashMap, HashSet};
+
+    /// The control-plane config the serve backends build internally:
+    /// one logical GPU per worker, fixed MP 1, mini cost model.
+    fn mirror_sim_cfg(
+        policy: PolicyConfig,
+        n_workers: usize,
+        max_batch: usize,
+        seed: u64,
+        fault: FaultConfig,
+    ) -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.n_gpus = n_workers;
+        cfg.cluster.mp_degrees = vec![1];
+        cfg.cluster.max_batch_per_worker = max_batch;
+        cfg.model = ModelCost::mini();
+        cfg.policy = policy;
+        cfg.policy.resource = ResourceKind::Fixed(1);
+        cfg.seed = seed;
+        cfg.fault = fault;
+        cfg
+    }
+
+    /// Terminal-failure set from the audited event stream.
+    fn terminal_failures(
+        audit: &Auditor,
+    ) -> BTreeSet<(usize, &'static str)> {
+        audit
+            .events()
+            .iter()
+            .filter_map(|r| match r.ev {
+                AuditEvent::Failed { traj, reason } => {
+                    Some((traj, reason.name()))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Differential property: for the same specs, policy, and fault
+    /// seed, every plan-pure fault counter (draws that depend only on
+    /// decision identity, never on wall/virtual timing) and the
+    /// terminal-failure set must be identical between the simulator and
+    /// the threaded serving path, with conservation holding on both.
+    /// Timing-dependent counters (displaced, cold_spikes, recovered) are
+    /// deliberately excluded — they depend on what was in flight when a
+    /// crash fired, which the two clocks order differently.
+    fn fault_parity_property(name: &str, policy: PolicyConfig) {
+        let engine = heddle::runtime::Engine::synthetic();
+        let max_seq = engine.manifest.model.max_seq;
+        let n_workers = 3usize;
+        let max_batch = 2usize;
+        let mut effective = 0usize;
+        heddle::testkit::check(name, 13, |g| {
+            let mut rng = g.rng();
+            let seed = 1 + rng.next_u64() % 100_000;
+            let mut fault = FaultConfig::default();
+            fault.enabled = true;
+            fault.seed = 1 + rng.next_u64() % 100_000;
+            fault.tool_fail_prob = 0.30;
+            fault.tool_hang_prob = 0.10;
+            fault.tool_deadline = 1.0;
+            fault.worker_crash_prob = 0.6;
+            fault.worker_mttf = 0.05;
+            fault.straggler_prob = 0.3;
+            // Whether a cold start fires depends on FaaS pool warmth at
+            // the moment of the call — timing, not plan identity.
+            fault.cold_spike_prob = 0.0;
+
+            // Plan-purity guard: a crash scheduled after one path's
+            // drain but before the other's would fire on only one side.
+            // With every scheduled crash inside the first second and a
+            // >= 2 s tool call pinned below, both runs outlive every
+            // crash and fire the identical set.
+            let plan = FaultPlan::new(&fault, n_workers);
+            let latest_crash = (0..n_workers)
+                .map(|w| plan.crash_time(w))
+                .filter(|t| t.is_finite())
+                .fold(0.0, f64::max);
+            if latest_crash > 1.0 {
+                return Ok(());
+            }
+
+            let mut wl = WorkloadConfig::new(Domain::Coding, 2, seed);
+            wl.group_size = 4;
+            let mut specs: Vec<TrajectorySpec> = generate(&wl)
+                .iter()
+                .map(|s| fit_to_ring(s, max_seq, 0.05))
+                .collect();
+            // Makespan floor: pin one tool call at 2 s so both paths
+            // outlive `latest_crash` (tool latencies are spec-native on
+            // both clocks).
+            let Some(k) = specs.iter().position(|s| s.n_steps() >= 2)
+            else {
+                return Ok(());
+            };
+            specs[k].steps[0].tool_latency = 2.0;
+            let history = history_workload(Domain::Coding, seed);
+
+            let serve_cfg = ServeConfig {
+                n_workers,
+                max_batch,
+                policy,
+                tool_scale: 1.0,
+                token_scale: 1.0,
+                seed,
+                audit: true,
+                fault,
+                ..Default::default()
+            };
+            let srv = serve_rollout(&engine, &serve_cfg, &history, &specs)
+                .map_err(|e| format!("serve: {e}"))?;
+            let sim_cfg = mirror_sim_cfg(
+                policy, n_workers, max_batch, seed, fault,
+            );
+            let sim = Run::new(&sim_cfg, &history, &specs)
+                .audit()
+                .exec()
+                .map_err(|e| format!("sim: {e}"))?;
+
+            let a = sim.faults;
+            let b = srv.run.faults;
+            for (what, x, y) in [
+                ("tool_failures", a.tool_failures, b.tool_failures),
+                ("tool_hangs", a.tool_hangs, b.tool_hangs),
+                ("retries", a.retries, b.retries),
+                ("retry_exhausted", a.retry_exhausted, b.retry_exhausted),
+                ("failed", a.failed, b.failed),
+                ("stragglers", a.stragglers, b.stragglers),
+                ("worker_crashes", a.worker_crashes, b.worker_crashes),
+            ] {
+                heddle::prop_assert!(
+                    x == y,
+                    "{what}: sim {x} != serve {y} (fault seed {})",
+                    fault.seed
+                );
+            }
+            let sa = sim.audit.as_ref().expect("sim auditor attached");
+            let sb = srv.run.audit.as_ref().expect("serve auditor attached");
+            heddle::prop_assert!(sa.ok(), "sim: {}", sa.report_violations());
+            heddle::prop_assert!(
+                sb.ok(),
+                "serve: {}",
+                sb.report_violations()
+            );
+            heddle::prop_assert!(
+                sa.completed() + sa.failed() == sa.submitted(),
+                "sim conservation broken"
+            );
+            heddle::prop_assert!(
+                sb.completed() + sb.failed() == sb.submitted(),
+                "serve conservation broken"
+            );
+            heddle::prop_assert!(
+                terminal_failures(sa) == terminal_failures(sb),
+                "terminal-failure sets diverge: sim {:?} vs serve {:?}",
+                terminal_failures(sa),
+                terminal_failures(sb)
+            );
+            effective += 1;
+            Ok(())
+        });
+        assert!(
+            effective >= 10,
+            "{name}: only {effective} effective differential cases"
+        );
+    }
+
+    #[test]
+    fn sim_serve_fault_parity_heddle() {
+        fault_parity_property(
+            "sim_serve_fault_parity_heddle",
+            PolicyConfig::heddle(),
+        );
+    }
+
+    #[test]
+    fn sim_serve_fault_parity_verl() {
+        fault_parity_property(
+            "sim_serve_fault_parity_verl",
+            PolicyConfig::verl(1),
+        );
+    }
+
+    /// Regression: degraded mode is sticky across a second (and third)
+    /// worker crash — the admission cut is applied exactly once. The
+    /// audited event stream must show a single `Degraded { on: true }`
+    /// regardless of crash count, never a toggle off, and every
+    /// post-degraded admission must respect the once-clamped cap
+    /// (`floor(max_batch * DEGRADED_SLOT_FRACTION)`), not a compounded
+    /// one (the scheduler-level unit test pins the cap arithmetic).
+    #[test]
+    fn serve_degraded_mode_sticky_across_second_crash() {
+        let engine = heddle::runtime::Engine::synthetic();
+        let max_seq = engine.manifest.model.max_seq;
+        let max_batch = 8usize;
+        let cap = ((max_batch as f64
+            * heddle::coordinator::scheduler::DEGRADED_SLOT_FRACTION)
+            as usize)
+            .max(1);
+        assert_eq!(cap, 7);
+        let mut saw_multi_crash = false;
+        for fault_seed in 1..=6u64 {
+            let mut wl = WorkloadConfig::new(Domain::Coding, 4, fault_seed);
+            wl.group_size = 6;
+            let specs: Vec<TrajectorySpec> = generate(&wl)
+                .iter()
+                .map(|s| fit_to_ring(s, max_seq, 0.05))
+                .collect();
+            let history = history_workload(Domain::Coding, fault_seed);
+            let mut fault = FaultConfig::quiescent(fault_seed);
+            fault.worker_crash_prob = 1.0;
+            fault.worker_mttf = 0.3;
+            let cfg = ServeConfig {
+                n_workers: 4,
+                max_batch,
+                policy: PolicyConfig::heddle(),
+                tool_scale: 1.0,
+                token_scale: 1.0,
+                seed: fault_seed,
+                audit: true,
+                fault,
+                ..Default::default()
+            };
+            let out = serve_rollout(&engine, &cfg, &history, &specs)
+                .unwrap_or_else(|e| panic!("fault seed {fault_seed}: {e}"));
+            let audit = out.run.audit.as_ref().expect("auditing enabled");
+            assert!(
+                audit.ok(),
+                "fault seed {fault_seed}: {}",
+                audit.report_violations()
+            );
+            assert_eq!(
+                audit.completed() + audit.failed(),
+                audit.submitted()
+            );
+            assert_eq!(
+                audit.failed(),
+                0,
+                "fault seed {fault_seed}: crashes alone must not lose work"
+            );
+            let crashes = audit
+                .events()
+                .iter()
+                .filter(|r| {
+                    matches!(r.ev, AuditEvent::WorkerCrashed { .. })
+                })
+                .count();
+            let degraded_on = audit
+                .events()
+                .iter()
+                .filter(|r| matches!(r.ev, AuditEvent::Degraded { on: true }))
+                .count();
+            let degraded_off = audit
+                .events()
+                .iter()
+                .filter(|r| {
+                    matches!(r.ev, AuditEvent::Degraded { on: false })
+                })
+                .count();
+            assert!(crashes <= 3, "last survivor must never crash");
+            assert_eq!(degraded_off, 0, "degraded mode must be sticky");
+            assert_eq!(
+                degraded_on,
+                usize::from(crashes > 0),
+                "fault seed {fault_seed}: degraded toggled {degraded_on} \
+                 times across {crashes} crashes"
+            );
+            if crashes >= 2 {
+                saw_multi_crash = true;
+            }
+            // Replay the event stream: after the degraded toggle, no
+            // admission may push a worker past the once-clamped cap.
+            let mut degraded = false;
+            let mut active: HashMap<usize, HashSet<usize>> = HashMap::new();
+            let mut host: HashMap<usize, usize> = HashMap::new();
+            for r in audit.events() {
+                match r.ev {
+                    AuditEvent::Degraded { on: true } => degraded = true,
+                    AuditEvent::Admitted { traj, worker } => {
+                        active.entry(worker).or_default().insert(traj);
+                        host.insert(traj, worker);
+                        if degraded {
+                            let n = active[&worker].len();
+                            assert!(
+                                n <= cap,
+                                "fault seed {fault_seed}: worker {worker} \
+                                 at {n} active > degraded cap {cap}"
+                            );
+                        }
+                    }
+                    AuditEvent::Completed { traj, worker }
+                    | AuditEvent::ToolWait { traj, worker, .. }
+                    | AuditEvent::Preempted { traj, worker, .. }
+                    | AuditEvent::Displaced { traj, worker } => {
+                        active.entry(worker).or_default().remove(&traj);
+                        host.remove(&traj);
+                    }
+                    AuditEvent::Failed { traj, .. } => {
+                        if let Some(w) = host.remove(&traj) {
+                            active.entry(w).or_default().remove(&traj);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        assert!(
+            saw_multi_crash,
+            "no run fired >= 2 crashes; the sticky regression never ran"
+        );
+    }
+
+    /// The acceptance-criterion run, in-process: a serve chaos run on
+    /// the synthetic engine fires real worker crashes, displaces the
+    /// dead workers' trajectories, passes every auditor invariant, and
+    /// produces byte-identical decisions across two same-seed runs.
+    #[test]
+    fn serve_crash_chaos_displaces_and_stays_deterministic() {
+        let engine = heddle::runtime::Engine::synthetic();
+        let max_seq = engine.manifest.model.max_seq;
+        let mut total_displaced = 0usize;
+        for fault_seed in [1u64, 2, 3] {
+            let mut wl = WorkloadConfig::new(Domain::Coding, 3, fault_seed);
+            wl.group_size = 8;
+            let specs: Vec<TrajectorySpec> = generate(&wl)
+                .iter()
+                .map(|s| fit_to_ring(s, max_seq, 0.05))
+                .collect();
+            let history = history_workload(Domain::Coding, fault_seed);
+            let mut fault = FaultConfig::quiescent(fault_seed);
+            fault.worker_crash_prob = 1.0;
+            fault.worker_mttf = 0.3;
+            let cfg = ServeConfig {
+                n_workers: 4,
+                max_batch: 8,
+                policy: PolicyConfig::heddle(),
+                tool_scale: 1.0,
+                token_scale: 1.0,
+                seed: fault_seed,
+                audit: true,
+                fault,
+                ..Default::default()
+            };
+            let out = ServeRun::new(&engine, &cfg, &history, &specs)
+                .determinism_check()
+                .exec()
+                .unwrap_or_else(|e| panic!("fault seed {fault_seed}: {e}"));
+            assert!(
+                out.run.determinism_decisions.unwrap() > 0,
+                "fault seed {fault_seed}: empty decision trace"
+            );
+            let audit = out.run.audit.as_ref().expect("auditing enabled");
+            assert!(
+                audit.ok(),
+                "fault seed {fault_seed}: {}",
+                audit.report_violations()
+            );
+            assert_eq!(
+                audit.completed() + audit.failed(),
+                audit.submitted()
+            );
+            assert!(
+                out.run.faults.worker_crashes >= 1,
+                "fault seed {fault_seed}: no worker crash fired"
+            );
+            total_displaced += out.run.faults.displaced;
+        }
+        assert!(
+            total_displaced >= 1,
+            "three all-crash chaos runs never displaced a trajectory"
+        );
+    }
+
+    /// Cold-start spikes on the serving path: 70 near-simultaneous tool
+    /// calls in one domain overwhelm the FaaS pool's 64 prewarmed
+    /// containers, so some calls must cold-start; with
+    /// `cold_spike_prob = 1.0` every cold start pays the spike and the
+    /// counter must move.
+    #[test]
+    fn serve_cold_start_spikes_fire_under_bursty_tools() {
+        let engine = heddle::runtime::Engine::synthetic();
+        let n = 70usize;
+        let specs: Vec<TrajectorySpec> = (0..n)
+            .map(|i| TrajectorySpec {
+                id: i,
+                prompt_id: i,
+                group_idx: 0,
+                domain: Domain::Coding,
+                prompt_tokens: 4,
+                plan_tokens: 4,
+                difficulty: 0.5,
+                temperature: 1.0,
+                steps: vec![
+                    StepSpec {
+                        gen_tokens: 4,
+                        tool_output_tokens: 4,
+                        tool_latency: 5.0,
+                        tool_failed: false,
+                    },
+                    StepSpec {
+                        gen_tokens: 4,
+                        tool_output_tokens: 0,
+                        tool_latency: 0.0,
+                        tool_failed: false,
+                    },
+                ],
+            })
+            .collect();
+        let history = history_workload(Domain::Coding, 3);
+        let mut fault = FaultConfig::quiescent(3);
+        fault.cold_spike_prob = 1.0;
+        fault.cold_spike_factor = 8.0;
+        let cfg = ServeConfig {
+            n_workers: 4,
+            max_batch: 32,
+            policy: PolicyConfig::verl(1),
+            tool_scale: 1.0,
+            token_scale: 1.0,
+            seed: 3,
+            audit: true,
+            fault,
+            ..Default::default()
+        };
+        let out = serve_rollout(&engine, &cfg, &history, &specs)
+            .expect("cold-spike chaos run failed");
+        let audit = out.run.audit.as_ref().expect("auditing enabled");
+        assert!(audit.ok(), "{}", audit.report_violations());
+        assert_eq!(audit.completed(), n, "cold spikes must not lose work");
+        assert!(
+            out.run.faults.cold_spikes >= 1,
+            "no cold spike despite {n} concurrent calls at prob 1.0"
+        );
+    }
+}
+
 // ---- artifact-dependent (skip when artifacts/ absent) ------------------
 
 fn artifacts_dir() -> Option<PathBuf> {
