@@ -10,9 +10,10 @@
 //! ```
 
 use heddle::config::PolicyConfig;
+use heddle::harness::ServeRun;
 use heddle::predictor::history_workload;
 use heddle::runtime::Engine;
-use heddle::serve::{serve_rollout, ServeConfig};
+use heddle::serve::ServeConfig;
 use heddle::workload::{generate, Domain, WorkloadConfig};
 use std::path::Path;
 
@@ -46,7 +47,7 @@ fn main() -> anyhow::Result<()> {
             seed,
             ..Default::default()
         };
-        let out = serve_rollout(&engine, &cfg, &history, &specs)?;
+        let out = ServeRun::new(&engine, &cfg, &history, &specs).exec()?;
         println!(
             "{name:24} wall={:7.2}s tokens={:6} throughput={:7.1} tok/s \
              tail_ratio={:.2} queue(mean)={:.3}s migrations={} \

@@ -5,9 +5,10 @@
 //! `cargo bench --bench runtime_hotpath`
 
 use heddle::config::PolicyConfig;
+use heddle::harness::ServeRun;
 use heddle::predictor::history_workload;
 use heddle::runtime::Engine;
-use heddle::serve::{serve_rollout, ServeConfig};
+use heddle::serve::ServeConfig;
 use heddle::util::bench::bench;
 use heddle::workload::{generate, Domain, WorkloadConfig};
 use std::path::Path;
@@ -74,7 +75,7 @@ fn main() -> anyhow::Result<()> {
         seed: 3,
         ..Default::default()
     };
-    let out = serve_rollout(&engine, &cfg, &history, &specs)?;
+    let out = ServeRun::new(&engine, &cfg, &history, &specs).exec()?;
     println!(
         "\nserve mini-run: {} trajectories, {} tokens in {:.2}s \
          ({:.0} tok/s end-to-end)",

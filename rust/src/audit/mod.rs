@@ -38,6 +38,8 @@
 //! | `degraded`         | on                         | scheduler         |
 //! | `kv_charge`        | traj, worker, bytes        | ring accounting   |
 //! | `kv_release`       | traj, worker, bytes        | ring accounting   |
+//! | `resize_parked`    | traj, worker               | resize protocol   |
+//! | `spec_truncated`   | traj, dropped_steps        | serve admission   |
 //!
 //! ## Invariants checked
 //!
@@ -79,6 +81,15 @@
 //!    `[submit_time, finish_time]`, reconcile with the scalar metrics
 //!    (`queue_delay`/`gpu_time`/`tool_time`), and match the decision
 //!    events 1:1 ([`Auditor::check_spans`]).
+//!
+//! 10. **Live resize mapping** — every `resized` event must target a
+//!     live worker that is *drained* (zero active trajectories) when
+//!     its MP degree actually changes; the auditor maintains the live
+//!     worker→degree map across resizes and crashes, requires each
+//!     `provisioned` summary's GPU count to equal the live map's degree
+//!     sum, and — when a per-degree slot unit is declared
+//!     ([`Auditor::set_slot_unit`]) — rescales the worker's slot
+//!     capacity so invariant 3 tracks the post-resize group size.
 
 use crate::metrics::{PhaseKind, RolloutReport};
 use crate::util::json::Json;
@@ -129,6 +140,14 @@ pub enum AuditEvent {
     KvCharge { traj: usize, worker: usize, bytes: u64 },
     /// KV bytes released from a worker's ring.
     KvRelease { traj: usize, worker: usize, bytes: u64 },
+    /// Running trajectory drained off a worker entering an MP-group
+    /// resize; its KV stays resident and it re-queues when the group
+    /// re-forms (or is displaced if the resize aborts on a crash).
+    ResizeParked { traj: usize, worker: usize },
+    /// A spec's step list was truncated/clamped by `fit_to_ring` to fit
+    /// the engine's KV ring (counted in the report, not a decision
+    /// about a live trajectory).
+    SpecTruncated { traj: usize, dropped_steps: usize },
 }
 
 /// Why a trajectory was terminally failed.
@@ -172,6 +191,8 @@ impl AuditEvent {
             AuditEvent::Degraded { .. } => "degraded",
             AuditEvent::KvCharge { .. } => "kv_charge",
             AuditEvent::KvRelease { .. } => "kv_release",
+            AuditEvent::ResizeParked { .. } => "resize_parked",
+            AuditEvent::SpecTruncated { .. } => "spec_truncated",
         }
     }
 
@@ -193,7 +214,9 @@ impl AuditEvent {
             | AuditEvent::Displaced { traj, .. }
             | AuditEvent::MigrationAborted { traj, .. }
             | AuditEvent::KvCharge { traj, .. }
-            | AuditEvent::KvRelease { traj, .. } => Some(traj),
+            | AuditEvent::KvRelease { traj, .. }
+            | AuditEvent::ResizeParked { traj, .. }
+            | AuditEvent::SpecTruncated { traj, .. } => Some(traj),
             AuditEvent::Resized { .. }
             | AuditEvent::Provisioned { .. }
             | AuditEvent::WorkerCrashed { .. }
@@ -280,6 +303,14 @@ impl Record {
                 put("worker", worker);
                 put("bytes", bytes as usize);
             }
+            AuditEvent::ResizeParked { traj, worker } => {
+                put("traj", traj);
+                put("worker", worker);
+            }
+            AuditEvent::SpecTruncated { traj, dropped_steps } => {
+                put("traj", traj);
+                put("dropped_steps", dropped_steps);
+            }
         }
         if let Some(r) = reason {
             o.insert("reason".into(), Json::Str(r.into()));
@@ -310,6 +341,10 @@ enum Lifecycle {
     Queued { worker: usize },
     Running { worker: usize },
     ToolParked,
+    /// Drained off a resizing worker; KV still resident there. Legal
+    /// exits: re-enqueue (resize completed) or displacement (resize
+    /// aborted by a crash).
+    ResizeParked,
     Done,
     /// Terminally failed with an audited reason (counts toward
     /// conservation alongside `Done`).
@@ -357,6 +392,12 @@ pub struct Auditor {
     failed: usize,
     /// Workers that have crashed (invariant 7 fencing).
     crashed: std::collections::BTreeSet<usize>,
+    /// Live worker → MP degree map built from `resized` events and
+    /// pruned on crashes (invariant 10).
+    mp: BTreeMap<usize, usize>,
+    /// Slots per MP degree unit: when set, a `resized` event rescales
+    /// the worker's slot capacity to `degree * slot_unit`.
+    slot_unit: Option<usize>,
     /// Per-worker KV bytes currently charged (invariant 8).
     kv_used: Vec<u64>,
     /// Per-worker KV ring capacity in bytes (empty = check disabled).
@@ -377,6 +418,13 @@ impl Auditor {
     pub fn set_worker_slots(&mut self, slots: Vec<usize>) {
         self.active.resize(slots.len(), 0);
         self.slots = slots;
+    }
+
+    /// Declare the slots-per-GPU unit so `resized` events rescale a
+    /// worker's slot capacity to `degree * unit` (invariant 10's
+    /// slot-capacity conservation across resizes).
+    pub fn set_slot_unit(&mut self, unit: usize) {
+        self.slot_unit = Some(unit);
     }
 
     pub fn n_events(&self) -> usize {
@@ -462,7 +510,45 @@ impl Auditor {
                 // later submit/enqueue finds a known trajectory.
                 self.traj_entry(traj);
             }
-            AuditEvent::Resized { .. } => {}
+            AuditEvent::Resized { worker, degree } => {
+                if degree == 0 {
+                    self.violate(
+                        t,
+                        format!("worker {worker}: resized to degree 0"),
+                    );
+                }
+                if self.crashed.contains(&worker) {
+                    self.violate(
+                        t,
+                        format!("worker {worker}: resized after crash"),
+                    );
+                }
+                // A degree *change* is only legal on a drained worker:
+                // the resize protocol must park every active trajectory
+                // first (first-time sizing at startup is unconstrained).
+                if let Some(&prev) = self.mp.get(&worker) {
+                    let n = self.active.get(worker).copied().unwrap_or(0);
+                    if prev != degree && n > 0 {
+                        self.violate(
+                            t,
+                            format!(
+                                "worker {worker}: resized {prev}->{degree} \
+                                 with {n} active trajectories (not drained)"
+                            ),
+                        );
+                    }
+                }
+                self.mp.insert(worker, degree);
+                if let Some(unit) = self.slot_unit {
+                    if worker >= self.slots.len() {
+                        self.slots.resize(worker + 1, 0);
+                    }
+                    if worker >= self.active.len() {
+                        self.active.resize(worker + 1, 0);
+                    }
+                    self.slots[worker] = degree * unit;
+                }
+            }
             AuditEvent::Provisioned { workers: _, gpus, budget } => {
                 if gpus > budget {
                     self.violate(
@@ -471,6 +557,20 @@ impl Auditor {
                             "allocation uses {gpus} GPUs over budget {budget}"
                         ),
                     );
+                }
+                // Invariant 10: the summary must agree with the live
+                // worker→degree map (crashed workers already pruned).
+                if !self.mp.is_empty() {
+                    let live: usize = self.mp.values().sum();
+                    if live != gpus {
+                        self.violate(
+                            t,
+                            format!(
+                                "provisioned {gpus} GPUs but live resize \
+                                 map sums to {live}"
+                            ),
+                        );
+                    }
                 }
             }
             AuditEvent::Enqueued { traj, worker } => {
@@ -491,7 +591,9 @@ impl Auditor {
                     );
                 }
                 match state {
-                    Lifecycle::New | Lifecycle::ToolParked => {
+                    Lifecycle::New
+                    | Lifecycle::ToolParked
+                    | Lifecycle::ResizeParked => {
                         self.traj_entry(traj).state =
                             Lifecycle::Queued { worker };
                     }
@@ -753,6 +855,8 @@ impl Auditor {
                         format!("worker {worker}: double crash"),
                     );
                 }
+                // Dead workers leave the live resize map (invariant 10).
+                self.mp.remove(&worker);
             }
             AuditEvent::Displaced { traj, worker } => {
                 if !self.crashed.contains(&worker) {
@@ -773,8 +877,12 @@ impl Auditor {
                     Lifecycle::Queued { worker: qw } if qw == worker => {
                         self.traj_entry(traj).state = Lifecycle::New;
                     }
-                    // Tool-parked: only the KV prefix was resident.
+                    // Tool-parked / resize-parked: only the KV prefix
+                    // was resident (active already decremented).
                     Lifecycle::ToolParked => {}
+                    Lifecycle::ResizeParked => {
+                        self.traj_entry(traj).state = Lifecycle::New;
+                    }
                     other => self.violate(
                         t,
                         format!(
@@ -807,6 +915,31 @@ impl Auditor {
             }
             AuditEvent::KvRelease { traj, worker, bytes } => {
                 self.kv_release(t, traj, worker, bytes);
+            }
+            AuditEvent::ResizeParked { traj, worker } => {
+                let state = self.traj_entry(traj).state;
+                match state {
+                    Lifecycle::Running { worker: rw } if rw == worker => {
+                        self.traj_entry(traj).state =
+                            Lifecycle::ResizeParked;
+                        self.leave_worker(t, worker);
+                    }
+                    other => self.violate(
+                        t,
+                        format!(
+                            "traj {traj}: resize-parked off worker \
+                             {worker} from illegal state {other:?}"
+                        ),
+                    ),
+                }
+                // The KV prefix stays resident: a virtual degree swap
+                // does not move or drop caches.
+                self.traj_entry(traj).kv_worker = Some(worker);
+            }
+            AuditEvent::SpecTruncated { traj, .. } => {
+                // Informational (pre-submission admission warning);
+                // just make the trajectory known.
+                self.traj_entry(traj);
             }
         }
     }
@@ -1294,6 +1427,12 @@ impl Auditor {
                     AuditEvent::Degraded { on } => {
                         format!("degraded {}", if on { "on" } else { "off" })
                     }
+                    AuditEvent::ResizeParked { traj, worker } => {
+                        format!("resize-park t{traj} w{worker}")
+                    }
+                    AuditEvent::SpecTruncated { traj, dropped_steps } => {
+                        format!("truncate t{traj} d{dropped_steps}")
+                    }
                     AuditEvent::KvCharge { .. }
                     | AuditEvent::KvRelease { .. } => return None,
                 })
@@ -1673,6 +1812,135 @@ mod tests {
         );
         assert!(!a.ok());
         assert!(a.report_violations().contains("double-charge"));
+    }
+
+    #[test]
+    fn clean_resize_sequence_passes() {
+        // Full protocol: startup sizing, park the running trajectory,
+        // swap degrees between two drained workers, re-queue, finish.
+        let mut a = Auditor::new();
+        a.set_worker_slots(vec![2, 4]);
+        a.set_slot_unit(2);
+        a.record(0.0, AuditEvent::Resized { worker: 0, degree: 1 });
+        a.record(0.0, AuditEvent::Resized { worker: 1, degree: 2 });
+        a.record(
+            0.0,
+            AuditEvent::Provisioned { workers: 2, gpus: 3, budget: 4 },
+        );
+        a.record(0.0, AuditEvent::Submitted { traj: 0 });
+        a.record(0.0, AuditEvent::Enqueued { traj: 0, worker: 0 });
+        a.record(0.1, AuditEvent::Admitted { traj: 0, worker: 0 });
+        a.record(0.5, AuditEvent::ResizeParked { traj: 0, worker: 0 });
+        a.record(0.6, AuditEvent::Resized { worker: 0, degree: 2 });
+        a.record(0.6, AuditEvent::Resized { worker: 1, degree: 1 });
+        a.record(
+            0.6,
+            AuditEvent::Provisioned { workers: 2, gpus: 3, budget: 4 },
+        );
+        a.record(0.6, AuditEvent::Enqueued { traj: 0, worker: 0 });
+        a.record(0.7, AuditEvent::Admitted { traj: 0, worker: 0 });
+        a.record(1.0, AuditEvent::Completed { traj: 0, worker: 0 });
+        a.check_complete(2.0);
+        assert!(a.ok(), "{}", a.report_violations());
+    }
+
+    #[test]
+    fn resize_without_drain_flagged() {
+        let mut a = Auditor::new();
+        a.set_worker_slots(vec![4]);
+        a.record(0.0, AuditEvent::Resized { worker: 0, degree: 1 });
+        a.record(0.0, AuditEvent::Submitted { traj: 0 });
+        a.record(0.0, AuditEvent::Enqueued { traj: 0, worker: 0 });
+        a.record(0.1, AuditEvent::Admitted { traj: 0, worker: 0 });
+        // Degree change while traj 0 is still active on the worker.
+        a.record(0.2, AuditEvent::Resized { worker: 0, degree: 2 });
+        assert!(!a.ok());
+        assert!(a.report_violations().contains("not drained"));
+    }
+
+    #[test]
+    fn resize_on_crashed_worker_flagged() {
+        let mut a = Auditor::new();
+        a.record(0.0, AuditEvent::Resized { worker: 0, degree: 1 });
+        a.record(0.5, AuditEvent::WorkerCrashed { worker: 0 });
+        a.record(0.6, AuditEvent::Resized { worker: 0, degree: 2 });
+        assert!(!a.ok());
+        assert!(a.report_violations().contains("resized after crash"));
+    }
+
+    #[test]
+    fn provisioned_must_match_live_resize_map() {
+        let mut a = Auditor::new();
+        a.record(0.0, AuditEvent::Resized { worker: 0, degree: 1 });
+        a.record(0.0, AuditEvent::Resized { worker: 1, degree: 1 });
+        a.record(
+            0.0,
+            AuditEvent::Provisioned { workers: 2, gpus: 3, budget: 8 },
+        );
+        assert!(!a.ok());
+        assert!(a.report_violations().contains("live resize map"));
+        // After a crash the dead worker leaves the map: a summary over
+        // the survivor alone is consistent again.
+        let mut b = Auditor::new();
+        b.record(0.0, AuditEvent::Resized { worker: 0, degree: 2 });
+        b.record(0.0, AuditEvent::Resized { worker: 1, degree: 1 });
+        b.record(0.5, AuditEvent::WorkerCrashed { worker: 1 });
+        b.record(
+            0.6,
+            AuditEvent::Provisioned { workers: 1, gpus: 2, budget: 8 },
+        );
+        assert!(b.ok(), "{}", b.report_violations());
+    }
+
+    #[test]
+    fn resize_scales_slot_capacity() {
+        let mut a = Auditor::new();
+        a.set_worker_slots(vec![2]);
+        a.set_slot_unit(2);
+        a.record(0.0, AuditEvent::Resized { worker: 0, degree: 2 });
+        // Degree 2 x unit 2 = 4 slots: four admits fit, the fifth
+        // overflows.
+        for id in 0..5 {
+            a.record(0.0, AuditEvent::Submitted { traj: id });
+            a.record(0.0, AuditEvent::Enqueued { traj: id, worker: 0 });
+            a.record(0.1, AuditEvent::Admitted { traj: id, worker: 0 });
+            if id < 4 {
+                assert!(a.ok(), "{}", a.report_violations());
+            }
+        }
+        assert!(!a.ok());
+        assert!(a.report_violations().contains("exceeds 4 slots"));
+    }
+
+    #[test]
+    fn resize_abort_displacement_is_clean() {
+        // A crash mid-resize: the parked trajectory is displaced (its
+        // KV lived on the dead worker) and re-queues on a survivor.
+        let mut a = Auditor::new();
+        a.set_worker_slots(vec![2, 2]);
+        a.record(0.0, AuditEvent::Submitted { traj: 0 });
+        a.record(0.0, AuditEvent::Enqueued { traj: 0, worker: 0 });
+        a.record(0.1, AuditEvent::Admitted { traj: 0, worker: 0 });
+        a.record(0.5, AuditEvent::ResizeParked { traj: 0, worker: 0 });
+        a.record(0.6, AuditEvent::WorkerCrashed { worker: 0 });
+        a.record(0.6, AuditEvent::Displaced { traj: 0, worker: 0 });
+        a.record(0.6, AuditEvent::Enqueued { traj: 0, worker: 1 });
+        a.record(0.7, AuditEvent::Admitted { traj: 0, worker: 1 });
+        a.record(1.0, AuditEvent::Completed { traj: 0, worker: 1 });
+        a.check_complete(2.0);
+        assert!(a.ok(), "{}", a.report_violations());
+    }
+
+    #[test]
+    fn resize_park_from_queue_flagged() {
+        let mut a = Auditor::new();
+        a.record(0.0, AuditEvent::Submitted { traj: 0 });
+        a.record(0.0, AuditEvent::Enqueued { traj: 0, worker: 0 });
+        // Parking a queued (not running) trajectory is illegal: only
+        // active trajectories are drained by a resize.
+        a.record(0.1, AuditEvent::ResizeParked { traj: 0, worker: 0 });
+        assert!(!a.ok());
+        assert!(a.report_violations().contains("resize-parked"));
     }
 
     #[test]

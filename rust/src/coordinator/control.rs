@@ -203,6 +203,20 @@ impl ControlPlane {
         self.cfg.model.token_time(self.allocation.degrees[worker], batch)
     }
 
+    /// Live resize (§6, serve path): exchange the MP degrees of two
+    /// workers. A degree *swap* keeps the degree multiset — and hence
+    /// the GPU sum — invariant, so no provisioning budget check is
+    /// needed; the data plane is responsible for draining both workers
+    /// first. After a swap `allocation.degrees` is no longer sorted
+    /// descending, so it must never be fed back through
+    /// [`resource::evaluate`](super::resource::evaluate) (which
+    /// DP-repartitions over the sorted multiset); the per-index
+    /// consumers here (`worker_token_time*`, `replan_placement`,
+    /// `check_migration`) are all order-free.
+    pub fn swap_degrees(&mut self, a: usize, b: usize) {
+        self.allocation.degrees.swap(a, b);
+    }
+
     /// Refresh a trajectory's prediction after step `k` (progressive
     /// prediction, §4.1). Returns the predicted total length.
     pub fn refresh_prediction(
@@ -431,6 +445,32 @@ mod tests {
         }
         let (w, _) = cp.router.route_step(specs[0].id);
         assert_ne!(w, victim);
+    }
+
+    #[test]
+    fn swap_degrees_conserves_gpus_and_retimes_workers() {
+        let (_, _, mut cp) = setup(PolicyConfig::heddle());
+        let n = cp.n_workers();
+        if n < 2 {
+            return;
+        }
+        let total = cp.allocation.total_gpus();
+        let (da, db) =
+            (cp.allocation.degrees[0], cp.allocation.degrees[n - 1]);
+        let (ta, tb) =
+            (cp.worker_token_time(0), cp.worker_token_time(n - 1));
+        cp.swap_degrees(0, n - 1);
+        assert_eq!(cp.allocation.degrees[0], db);
+        assert_eq!(cp.allocation.degrees[n - 1], da);
+        assert_eq!(cp.allocation.total_gpus(), total);
+        assert_eq!(cp.worker_token_time(0), tb);
+        assert_eq!(cp.worker_token_time(n - 1), ta);
+        // Replanning after a swap must still cover every trajectory
+        // (presorted-DP has no worker-order assumption).
+        let remaining: Vec<(usize, f64)> =
+            (0..8).map(|i| (i, 100.0 * (i + 1) as f64)).collect();
+        let p = cp.replan_placement(&remaining);
+        assert_eq!(p.groups.iter().flatten().count(), 8);
     }
 
     #[test]

@@ -129,6 +129,73 @@ pub fn evaluate(
     }
 }
 
+/// Live resize scoring (§6, serve path): find the best *degree swap*
+/// between two live workers given each worker's remaining decode load
+/// (predicted tokens still to generate, summed over its resident
+/// trajectories).
+///
+/// Unlike [`evaluate`], which DP-repartitions the workload over the
+/// sorted degree *multiset* (and therefore scores every swap of the same
+/// multiset identically), this scorer is index-aware: worker `w`'s
+/// completion estimate is `loads[w] * base_time_at_mp(degrees[w])`, and a
+/// swap exchanges the two workers' token times while their resident load
+/// stays put. That is exactly the serve-time question — KV residency
+/// pins load to workers, so only the degrees can move.
+///
+/// Workers with `live[w] == false` (crashed) are excluded from both the
+/// candidate set and the makespan. Returns `Some((a, b, new_max))` for
+/// the strict-best swap whose post-swap makespan beats the current one
+/// by at least the factor `improvement` (e.g. `0.98` = require >= 2%
+/// gain), or `None` when no swap clears the bar.
+pub fn best_degree_swap(
+    degrees: &[usize],
+    loads: &[f64],
+    live: &[bool],
+    model: &ModelCost,
+    improvement: f64,
+) -> Option<(usize, usize, f64)> {
+    let n = degrees.len();
+    debug_assert_eq!(loads.len(), n);
+    debug_assert_eq!(live.len(), n);
+    let est: Vec<f64> = (0..n)
+        .map(|w| loads[w] * model.base_time_at_mp(degrees[w]))
+        .collect();
+    let cur_max = (0..n)
+        .filter(|&w| live[w])
+        .map(|w| est[w])
+        .fold(0.0_f64, f64::max);
+    if cur_max <= 0.0 {
+        return None;
+    }
+    let mut best: Option<(usize, usize, f64)> = None;
+    let mut best_max = cur_max * improvement;
+    for a in 0..n {
+        if !live[a] {
+            continue;
+        }
+        for b in (a + 1)..n {
+            if !live[b] || degrees[a] == degrees[b] {
+                continue;
+            }
+            let ea = loads[a] * model.base_time_at_mp(degrees[b]);
+            let eb = loads[b] * model.base_time_at_mp(degrees[a]);
+            let mut mx = ea.max(eb);
+            for w in 0..n {
+                if live[w] && w != a && w != b {
+                    mx = mx.max(est[w]);
+                }
+            }
+            // Strict `<` keeps the choice deterministic: ties resolve
+            // to the lexicographically-first (a, b) pair.
+            if mx < best_max {
+                best_max = mx;
+                best = Some((a, b, mx));
+            }
+        }
+    }
+    best
+}
+
 /// One random perturbation; returns None if the move is inapplicable.
 fn perturb(
     degrees: &[usize],
@@ -474,6 +541,58 @@ mod tests {
         assert!(times.windows(2).all(|w| w[0] <= w[1]), "{times:?}");
         // Group 0 (longest trajectories) is on the MP-8 worker.
         assert_eq!(a.partition.groups.len(), 5);
+    }
+
+    #[test]
+    fn best_degree_swap_moves_fast_worker_to_heavy_load() {
+        let model = ModelCost::mini();
+        // Worker 0 carries the heavy load at MP=1; worker 1 idles at
+        // MP=8. Swapping their degrees is the obvious win.
+        let degrees = [1usize, 8, 1];
+        let loads = [1000.0, 10.0, 10.0];
+        let live = [true, true, true];
+        let (a, b, mx) =
+            best_degree_swap(&degrees, &loads, &live, &model, 0.98)
+                .expect("clear improvement available");
+        assert_eq!((a, b), (0, 1));
+        let cur = 1000.0 * model.base_time_at_mp(1);
+        assert!(mx < cur * 0.98, "mx {mx} vs cur {cur}");
+    }
+
+    #[test]
+    fn best_degree_swap_none_when_balanced_or_dead() {
+        let model = ModelCost::mini();
+        // Loads already matched to degrees: no swap clears the 2% bar.
+        let degrees = [8usize, 1];
+        let loads = [1000.0, 10.0];
+        assert!(best_degree_swap(
+            &degrees,
+            &loads,
+            &[true, true],
+            &model,
+            0.98
+        )
+        .is_none());
+        // The only profitable partner is dead: no candidate pair.
+        let degrees = [1usize, 8];
+        let loads = [1000.0, 10.0];
+        assert!(best_degree_swap(
+            &degrees,
+            &loads,
+            &[true, false],
+            &model,
+            0.98
+        )
+        .is_none());
+        // Zero remaining load anywhere: nothing to optimize.
+        assert!(best_degree_swap(
+            &degrees,
+            &[0.0, 0.0],
+            &[true, true],
+            &model,
+            0.98
+        )
+        .is_none());
     }
 
     #[test]

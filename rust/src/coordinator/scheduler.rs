@@ -532,6 +532,45 @@ mod tests {
     }
 
     #[test]
+    fn degraded_cap_scales_with_mp_sized_slot_counts() {
+        // Under adaptive MP the threaded backend passes `degree *
+        // max_batch` as the nominal slot count, so the degraded cut must
+        // hold at every MP-scaled capacity: 16 -> 14, 8 -> 7, 1 -> 1.
+        for (nominal, capped) in [(16usize, 14usize), (8, 7), (1, 1)] {
+            let expected = ((nominal as f64 * DEGRADED_SLOT_FRACTION)
+                as usize)
+                .max(1);
+            assert_eq!(expected, capped, "cap arithmetic for {nominal}");
+            let mut q = SchedulerQueue::new(SchedulerKind::Pps);
+            q.push(req(7, 500.0, 0));
+            let mut active = ActiveSet::new();
+            for i in 0..capped {
+                active.insert(i, 10.0);
+            }
+            // Exactly at the degraded cap: no admission.
+            if capped < nominal {
+                assert_eq!(
+                    schedule_worker_degraded(
+                        &mut q, &active, nominal, true, true
+                    ),
+                    ScheduleAction::Idle,
+                    "nominal {nominal} admitted past degraded cap"
+                );
+            }
+            // One below the cap: admits.
+            active.remove(0);
+            match schedule_worker_degraded(
+                &mut q, &active, nominal, true, true,
+            ) {
+                ScheduleAction::Admit(r) => assert_eq!(r.traj_id, 7),
+                other => panic!(
+                    "nominal {nominal}: expected admit, got {other:?}"
+                ),
+            }
+        }
+    }
+
+    #[test]
     fn remove_trajectory_for_migration() {
         let mut q = SchedulerQueue::new(SchedulerKind::Pps);
         q.push(req(1, 10.0, 0));

@@ -1,7 +1,9 @@
 //! Unified run harness: one builder-style entry point for every way a
 //! rollout can be executed (plain, audited, fault-injected,
-//! determinism-checked), replacing the `simulate` / `simulate_audited`
-//! / `simulate_chaos` triple and the CLI's mode if-ladder.
+//! determinism-checked). [`Run`] is the only door to the simulator and
+//! [`ServeRun`] the only public door to the serving path — the old
+//! `simulate` / `simulate_audited` / `simulate_chaos` triple and the
+//! direct `serve_rollout` exports are gone.
 //!
 //! ```no_run
 //! use heddle::config::SimConfig;
@@ -310,13 +312,12 @@ mod tests {
     }
 
     #[test]
-    fn plain_run_matches_deprecated_shim() {
+    fn plain_run_is_deterministic_and_fault_free() {
         let (cfg, history, specs) = setup(11);
         let out = Run::new(&cfg, &history, &specs).exec().unwrap();
-        #[allow(deprecated)]
-        let old = crate::sim::simulate(&cfg, &history, &specs);
-        assert_eq!(out.report.makespan, old.makespan);
-        assert_eq!(out.report.total_tokens, old.total_tokens);
+        let again = Run::new(&cfg, &history, &specs).exec().unwrap();
+        assert_eq!(out.report.makespan, again.report.makespan);
+        assert_eq!(out.report.total_tokens, again.report.total_tokens);
         assert!(out.audit.is_none() || out.audit.as_ref().unwrap().ok());
         assert!(!out.faults_enabled);
         assert_eq!(out.faults.injected(), 0);
@@ -399,6 +400,7 @@ mod tests {
             "decode",
             "tool_wait",
             "migration_wait",
+            "resize_wait",
             "preempted",
         ] {
             let p = report.get("phases").unwrap().get(phase).unwrap();

@@ -93,6 +93,7 @@ fn main() -> anyhow::Result<()> {
                 policy,
                 seed: params.seed,
                 audit: args.flag("audit"),
+                adaptive_mp: args.flag("adaptive-mp"),
                 ..Default::default()
             };
             let domain = Domain::parse(args.get_or("domain", "coding"))
@@ -125,6 +126,11 @@ fn main() -> anyhow::Result<()> {
                 out.wall_seconds,
                 out.tokens_generated,
                 out.throughput()
+            );
+            // Grep-able by the CI adaptive-MP leg.
+            println!(
+                "resizes={} truncated_specs={}",
+                out.run.report.total_resizes, out.run.report.truncated_specs
             );
             if args.flag("audit") {
                 if let Some(a) = &out.run.audit {
@@ -421,7 +427,8 @@ fn main() -> anyhow::Result<()> {
                  [--fault-seed N] --determinism-check\n\
                  serve: --synthetic (stub engine; threaded workers + full \
                  fault surface) --workers N --batch N --group N \
-                 --artifacts DIR\n\
+                 --adaptive-mp (live MP resizing; --workers becomes the \
+                 GPU budget) --artifacts DIR\n\
                  reporting: --report-json FILE (stable schema_version 1)\n\
                  bench: --seeds N (consecutive seeds per policy; default \
                  3) writes BENCH_rollout.json unless --report-json is \

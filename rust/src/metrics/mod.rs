@@ -29,16 +29,22 @@ pub enum PhaseKind {
     MigrationWait,
     /// Preempted and parked off-worker, waiting for re-admission.
     Preempted,
+    /// Drained off a worker that is part of an in-flight MP-group
+    /// resize, waiting for the group to re-form (threaded serve backend
+    /// with `adaptive_mp`; the simulator resizes only at startup and
+    /// never exposes this phase).
+    ResizeWait,
 }
 
 impl PhaseKind {
-    pub const ALL: [PhaseKind; 6] = [
+    pub const ALL: [PhaseKind; 7] = [
         PhaseKind::Queue,
         PhaseKind::Prefill,
         PhaseKind::Decode,
         PhaseKind::ToolWait,
         PhaseKind::MigrationWait,
         PhaseKind::Preempted,
+        PhaseKind::ResizeWait,
     ];
 
     /// Stable lower-case name used as the JSON key for this phase.
@@ -50,6 +56,7 @@ impl PhaseKind {
             PhaseKind::ToolWait => "tool_wait",
             PhaseKind::MigrationWait => "migration_wait",
             PhaseKind::Preempted => "preempted",
+            PhaseKind::ResizeWait => "resize_wait",
         }
     }
 }
@@ -158,6 +165,15 @@ pub struct RolloutReport {
     pub total_migrations: usize,
     pub total_preemptions: usize,
     pub total_recomputed_tokens: usize,
+    /// Live MP-group resizes completed during the rollout (threaded
+    /// serve backend with `adaptive_mp`; zero on the simulator, which
+    /// only sizes groups at startup).
+    pub total_resizes: usize,
+    /// Specs whose step list was truncated or clamped by `fit_to_ring`
+    /// to fit the engine's KV ring (audited as `SpecTruncated`).
+    pub truncated_specs: usize,
+    /// Total trailing steps dropped across all truncated specs.
+    pub truncated_steps: usize,
 }
 
 impl RolloutReport {
@@ -182,6 +198,9 @@ impl RolloutReport {
             total_migrations,
             total_preemptions,
             total_recomputed_tokens,
+            total_resizes: 0,
+            truncated_specs: 0,
+            truncated_steps: 0,
         }
     }
 
@@ -330,6 +349,15 @@ impl RolloutReport {
                     (
                         "recomputed_tokens",
                         Json::Num(self.total_recomputed_tokens as f64),
+                    ),
+                    ("resizes", Json::Num(self.total_resizes as f64)),
+                    (
+                        "truncated_specs",
+                        Json::Num(self.truncated_specs as f64),
+                    ),
+                    (
+                        "truncated_steps",
+                        Json::Num(self.truncated_steps as f64),
                     ),
                 ]),
             ),

@@ -21,6 +21,12 @@
 //! path silently loses its multi-threaded backend. (The PJRT engine is
 //! deliberately `!Send` — its client is single-threaded — which is why
 //! `--features pjrt` builds fall back to one-thread serving.)
+//!
+//! Adaptive MP resizing leans on the same property: a worker thread's
+//! "MP group" is a bookkeeping construct in the control loop (degree,
+//! slot capacity, per-round cadence), not engine state, so growing or
+//! shrinking a group never touches this engine — the shared `&Engine`
+//! stays valid across any sequence of live `Resized` transitions.
 
 use super::manifest::Manifest;
 use crate::util::rng::Rng;

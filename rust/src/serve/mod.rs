@@ -8,24 +8,65 @@
 //! (scheduler, placement, migration, router) makes every orchestration
 //! decision.
 //!
-//! Two execution backends share these semantics:
+//! Two execution backends share these semantics, selected explicitly
+//! via [`ServeBackend`] in [`ServeConfig`] (no scattered feature /
+//! flag branching); [`crate::harness::ServeRun`] is the only public
+//! door — the `serve_rollout` entry point here is crate-internal:
 //!
-//! * **Threaded** ([`threaded`], the default build): each worker is a
-//!   real OS thread owning its queue, active set, and KV residency map,
-//!   talking to the control plane over channels. All five fault classes
-//!   run here — worker crashes are real thread teardown with
+//! * [`ServeBackend::Threaded`] (default without `pjrt`): each worker
+//!   is a real OS thread owning its queue, active set, and KV residency
+//!   map, talking to the control plane over channels. All five fault
+//!   classes run here — worker crashes are real thread teardown with
 //!   displacement/re-placement, stragglers stride the decode clock, and
 //!   cold-start spikes hit the FaaS pool — under the same auditor
 //!   invariants and `--determinism-check` gate as the simulator.
-//! * **Single-thread** ([`serve_rollout_single`], the only backend
-//!   under `--features pjrt`): workers are multiplexed on one thread
-//!   because the `xla` crate's PJRT handles are `!Send` (Rc-based).
+//! * [`ServeBackend::SingleThread`] (default — and only option — under
+//!   `--features pjrt`): workers are multiplexed on one thread because
+//!   the `xla` crate's PJRT handles are `!Send` (Rc-based).
 //!   Queue/active/KV state is still per-worker, but only the tool fault
-//!   classes (failures, hangs, retries) are injected there.
+//!   classes (failures, hangs, retries) are injected there, and
+//!   resources are always `Fixed(1)` (model parallelism does not exist
+//!   on a CPU client).
 //!
-//! Model parallelism does not exist on a CPU client, so the real path
-//! always runs `Fixed(1)` resources — the heterogeneous-MP claims are
-//! validated by the simulator (DESIGN.md §1).
+//! # Heterogeneous MP and live resizing (threaded backend)
+//!
+//! With [`ServeConfig::adaptive_mp`] the threaded backend provisions
+//! heterogeneous MP degrees from `coordinator::resource`'s
+//! sort-initialized SA (paper §6) — each worker thread stands in for an
+//! MP group of `degree` GPUs over the synthetic stub engine, with
+//! degree-scaled slot capacity (`degree * max_batch`) and degree-scaled
+//! decode cadence (high-MP workers step the virtual clock faster, the
+//! serve-side Formula-1 per-token-time term). The control plane then
+//! issues **live resize decisions** at tool-call boundaries:
+//!
+//! 1. **Decide** ([`crate::coordinator::resource::best_degree_swap`]):
+//!    pick
+//!    the degree *swap* between two live workers that minimizes the
+//!    estimated remaining makespan (remaining predicted tokens x
+//!    per-token time). Swaps keep the degree multiset — and the GPU
+//!    budget — invariant; a cooldown and a >= 2% min-gain bar stop
+//!    thrash.
+//! 2. **Drain**: every running trajectory on the two workers is parked
+//!    (`ResizeParked` audit event, `resize_wait` span, KV stays
+//!    resident), queued admissions to them are held, and the resize
+//!    waits `RESIZE_LATENCY` rounds of virtual time — the regroup cost.
+//! 3. **Commit**: degrees swap ([`ControlPlane::swap_degrees`]), paired
+//!    `Resized` events plus a `Provisioned` summary are audited against
+//!    the live worker->degree map, the placement DP replans over the
+//!    survivors, and parked trajectories re-enqueue (displacement
+//!    machinery unchanged).
+//! 4. **Abort on crash**: a worker crash mid-resize cancels the swap —
+//!    no `Resized` is emitted, parked trajectories on the dead worker
+//!    are `Displaced` (KV lost) and all parked work re-queues through
+//!    the standard crash re-placement path.
+//!
+//! Decisions run on the virtual clock, so same-seed runs are
+//! byte-identical under `--determinism-check`; the auditor's resize
+//! invariant checks drained-before-resize, live-map/`Provisioned`
+//! agreement, and slot-capacity conservation across every swap.
+//! All resize/truncation report keys (`total_resizes`,
+//! `truncated_specs`, `truncated_steps`) are additive within report
+//! `schema_version: 1`.
 
 #[cfg(not(feature = "pjrt"))]
 pub mod threaded;
@@ -46,8 +87,34 @@ use crate::workload::TrajectorySpec;
 use std::collections::HashMap;
 use std::time::Instant;
 
+/// Which execution backend runs the rollout. Selected explicitly in
+/// [`ServeConfig`] instead of scattered `cfg(feature)` / `--synthetic`
+/// branching; the default matches what the build can actually run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeBackend {
+    /// One OS thread per worker over a `Send` engine (the stub /
+    /// synthetic engine). Full fault surface + adaptive MP. Unavailable
+    /// under `--features pjrt` (the PJRT client is `!Send`).
+    Threaded,
+    /// All workers multiplexed on the calling thread. The only backend
+    /// compatible with PJRT; tool fault classes only, fixed MP=1.
+    SingleThread,
+}
+
+impl Default for ServeBackend {
+    fn default() -> Self {
+        if cfg!(feature = "pjrt") {
+            ServeBackend::SingleThread
+        } else {
+            ServeBackend::Threaded
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Execution backend (see [`ServeBackend`]).
+    pub backend: ServeBackend,
     pub n_workers: usize,
     /// Running batch per worker (<= largest compiled decode bucket).
     pub max_batch: usize,
@@ -73,11 +140,19 @@ pub struct ServeConfig {
     /// backend injects only the tool classes (see ROADMAP "Fault model
     /// & recovery semantics").
     pub fault: FaultConfig,
+    /// Heterogeneous MP with live trajectory-adaptive resizing (paper
+    /// §6 on the serve path). Threaded backend only: workers provision
+    /// heterogeneous degrees from the SA planner and the control plane
+    /// issues drain-swap-replan resizes at tool boundaries (see the
+    /// module header). `n_workers` is then the **GPU budget**, not the
+    /// thread count: the planner decides how many workers to form.
+    pub adaptive_mp: bool,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
+            backend: ServeBackend::default(),
             n_workers: 2,
             max_batch: 4,
             policy: PolicyConfig::heddle(),
@@ -88,6 +163,7 @@ impl Default for ServeConfig {
             seed: 0,
             audit: false,
             fault: FaultConfig::default(),
+            adaptive_mp: false,
         }
     }
 }
@@ -98,11 +174,29 @@ pub fn fit_to_ring(
     max_seq: usize,
     scale: f64,
 ) -> TrajectorySpec {
+    fit_to_ring_counted(spec, max_seq, scale).0
+}
+
+/// [`fit_to_ring`] with truncation accounting: returns the fitted spec,
+/// the number of trailing steps dropped, and whether the boundary step's
+/// token budget was clamped. Paper-scale specs routinely exceed the stub
+/// model's `max_seq = 256`, and the old API dropped the tail invisibly —
+/// both serve backends now aggregate these counts into the report
+/// (`truncated_specs` / `truncated_steps`) and emit one audited
+/// `SpecTruncated` event per affected trajectory. Full chunked replay of
+/// oversized specs stays a future item (ROADMAP).
+pub fn fit_to_ring_counted(
+    spec: &TrajectorySpec,
+    max_seq: usize,
+    scale: f64,
+) -> (TrajectorySpec, usize, bool) {
     let mut s = spec.scaled(scale);
+    let n_orig = s.steps.len();
     let margin = 4usize;
     s.prompt_tokens = s.prompt_tokens.clamp(1, max_seq / 4);
     let mut ctx = s.prompt_tokens;
     let mut keep = 0;
+    let mut clamped = false;
     for st in &mut s.steps {
         let need = st.gen_tokens + st.tool_output_tokens;
         if ctx + need + margin > max_seq {
@@ -113,6 +207,7 @@ pub fn fit_to_ring(
             // overflow the KV ring.
             let left = max_seq.saturating_sub(ctx + margin);
             if left >= 2 || keep == 0 {
+                clamped = true;
                 st.gen_tokens =
                     st.gen_tokens.min(left.saturating_sub(1)).max(1);
                 st.tool_output_tokens = 0;
@@ -131,7 +226,39 @@ pub fn fit_to_ring(
         last.tool_output_tokens = 0;
         last.tool_failed = false;
     }
-    s
+    let dropped = n_orig - s.steps.len();
+    (s, dropped, clamped)
+}
+
+/// Per-batch truncation accounting from [`fit_to_ring_counted`],
+/// shared by both backends: fitted specs plus the report counters and
+/// the per-trajectory audit payload.
+pub(crate) struct FittedSpecs {
+    pub specs: Vec<TrajectorySpec>,
+    /// `(traj index, dropped steps)` for every truncated spec.
+    pub truncated: Vec<(usize, usize)>,
+    pub truncated_steps: usize,
+}
+
+pub(crate) fn fit_specs(
+    specs: &[TrajectorySpec],
+    max_seq: usize,
+    scale: f64,
+) -> FittedSpecs {
+    let mut out = FittedSpecs {
+        specs: Vec::with_capacity(specs.len()),
+        truncated: Vec::new(),
+        truncated_steps: 0,
+    };
+    for (i, s) in specs.iter().enumerate() {
+        let (f, dropped, clamped) = fit_to_ring_counted(s, max_seq, scale);
+        if dropped > 0 || clamped {
+            out.truncated.push((i, dropped));
+            out.truncated_steps += dropped;
+        }
+        out.specs.push(f);
+    }
+    out
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -198,29 +325,45 @@ impl ServeOutcome {
 /// and tool behaviour replay `specs` (pre-fit to the ring); tokens are
 /// sampled from the real model.
 ///
-/// Dispatches to the per-worker-thread backend on the default (stub
-/// engine) build and to the single-thread multiplexer under
-/// `--features pjrt`, where the engine handles are `!Send`.
-pub fn serve_rollout(
+/// The single crate-internal entry point: dispatches on
+/// [`ServeConfig::backend`]. External callers go through
+/// [`crate::harness::ServeRun`], the only public door.
+pub(crate) fn serve_rollout(
     engine: &Engine,
     cfg: &ServeConfig,
     history: &[TrajectorySpec],
     specs: &[TrajectorySpec],
 ) -> anyhow::Result<ServeOutcome> {
-    #[cfg(not(feature = "pjrt"))]
-    {
-        threaded::serve_rollout_threaded(engine, cfg, history, specs)
-    }
-    #[cfg(feature = "pjrt")]
-    {
-        serve_rollout_single(engine, cfg, history, specs)
+    match cfg.backend {
+        ServeBackend::Threaded => {
+            #[cfg(not(feature = "pjrt"))]
+            {
+                threaded::serve_rollout_threaded(engine, cfg, history, specs)
+            }
+            #[cfg(feature = "pjrt")]
+            {
+                anyhow::bail!(
+                    "ServeBackend::Threaded needs a Send engine: the PJRT \
+                     client is single-threaded — use \
+                     ServeBackend::SingleThread"
+                );
+            }
+        }
+        ServeBackend::SingleThread => {
+            anyhow::ensure!(
+                !cfg.adaptive_mp,
+                "adaptive_mp needs ServeBackend::Threaded: the \
+                 single-thread backend has no resizable MP groups"
+            );
+            serve_rollout_single(engine, cfg, history, specs)
+        }
     }
 }
 
 /// Single-thread backend: every worker multiplexed on the calling
 /// thread. The only backend compatible with the `!Send` PJRT engine;
 /// injects the tool fault classes only.
-pub fn serve_rollout_single(
+pub(crate) fn serve_rollout_single(
     engine: &Engine,
     cfg: &ServeConfig,
     history: &[TrajectorySpec],
@@ -228,10 +371,8 @@ pub fn serve_rollout_single(
 ) -> anyhow::Result<ServeOutcome> {
     let max_seq = engine.manifest.model.max_seq;
     let vocab = engine.manifest.model.vocab;
-    let specs: Vec<TrajectorySpec> = specs
-        .iter()
-        .map(|s| fit_to_ring(s, max_seq, cfg.token_scale))
-        .collect();
+    let fitted = fit_specs(specs, max_seq, cfg.token_scale);
+    let specs = fitted.specs;
 
     // Control plane over logical workers (always MP=1 on CPU).
     let mut sim_cfg = SimConfig::default();
@@ -288,6 +429,12 @@ pub fn serve_rollout_single(
             if let Some(w) = control.router.assigned_worker(s.id) {
                 a.record(0.0, AuditEvent::Placed { traj: i, worker: w });
             }
+        }
+        for &(i, dropped) in &fitted.truncated {
+            a.record(
+                0.0,
+                AuditEvent::SpecTruncated { traj: i, dropped_steps: dropped },
+            );
         }
         Some(a)
     } else {
@@ -697,9 +844,11 @@ pub fn serve_rollout_single(
         }
         None => FaultStats::default(),
     };
-    let report = RolloutReport::from_trajectories(
+    let mut report = RolloutReport::from_trajectories(
         trajs.into_iter().map(|t| t.metrics).collect(),
     );
+    report.truncated_specs = fitted.truncated.len();
+    report.truncated_steps = fitted.truncated_steps;
     if let Some(a) = auditor.as_mut() {
         a.check_complete(wall);
         // `gpu_exact = false`: the Decode span covers residency wall
@@ -838,6 +987,54 @@ mod tests {
             assert_eq!(last.tool_latency, 0.0);
             assert!(!last.tool_failed);
         }
+    }
+
+    #[test]
+    fn fit_to_ring_counted_reports_truncation() {
+        // Oversized paper-scale spec: trailing steps dropped plus a
+        // boundary clamp, both visible to the caller now.
+        let s = spec(100, vec![(500, 200), (300, 100), (300, 100)]);
+        let (f, dropped, clamped) = fit_to_ring_counted(&s, 256, 1.0);
+        assert!(clamped);
+        assert_eq!(dropped, 3 - f.n_steps());
+        assert!(dropped >= 1);
+        // A spec that fits is untouched and unreported.
+        let s = spec(10, vec![(20, 5), (30, 5)]);
+        let (f, dropped, clamped) = fit_to_ring_counted(&s, 256, 1.0);
+        assert_eq!((dropped, clamped), (0, false));
+        assert_eq!(f.n_steps(), 2);
+        // fit_specs aggregates: one truncated spec, same step count.
+        let batch = vec![
+            spec(100, vec![(500, 200), (300, 100), (300, 100)]),
+            spec(10, vec![(20, 5), (30, 5)]),
+        ];
+        let fitted = fit_specs(&batch, 256, 1.0);
+        assert_eq!(fitted.truncated.len(), 1);
+        assert_eq!(fitted.truncated[0].0, 0);
+        assert_eq!(fitted.truncated_steps, fitted.truncated[0].1);
+    }
+
+    #[test]
+    fn backend_default_matches_build() {
+        let b = ServeBackend::default();
+        if cfg!(feature = "pjrt") {
+            assert_eq!(b, ServeBackend::SingleThread);
+        } else {
+            assert_eq!(b, ServeBackend::Threaded);
+        }
+    }
+
+    #[test]
+    fn adaptive_mp_rejected_on_single_thread_backend() {
+        let engine = Engine::synthetic();
+        let cfg = ServeConfig {
+            backend: ServeBackend::SingleThread,
+            adaptive_mp: true,
+            ..Default::default()
+        };
+        let err = serve_rollout(&engine, &cfg, &[], &[spec(8, vec![(4, 0)])])
+            .unwrap_err();
+        assert!(err.to_string().contains("adaptive_mp"), "{err}");
     }
 
     #[test]

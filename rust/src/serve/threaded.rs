@@ -31,12 +31,30 @@
 //! participates in every ⌈k⌉-th decode round, so its segments take `k`×
 //! longer in virtual time — the same decode-rate penalty the simulator
 //! applies via `worker_rate`.
+//!
+//! # Adaptive MP (heterogeneous groups + live resizing)
+//!
+//! With [`ServeConfig::adaptive_mp`] each worker thread stands in for a
+//! resizable MP *group* of `degree` GPUs: its slot capacity is
+//! `degree * max_batch` and its decode cadence scales with its degree
+//! (a worker at degree `d` participates every
+//! `round(base_time(d) / round_dt)`-th round, where `round_dt` is the
+//! fastest valid degree's token time — the serve-side Formula-1
+//! per-token-time term). At tool-call boundaries the control plane may
+//! swap the degrees of two live workers: both are drained
+//! (`ResizeParked`, `resize_wait` spans), the swap commits after
+//! `RESIZE_LATENCY_ROUNDS` of virtual time (`Resized` + `Provisioned`
+//! audit events, placement replanned), and parked work re-enqueues. A
+//! crash on either endpoint mid-resize aborts the swap and displaces
+//! through the standard crash path. The full protocol is documented in
+//! the [`serve`](super) module header.
 
-use super::{fit_to_ring, ServeConfig, ServeOutcome};
+use super::{fit_specs, ServeConfig, ServeOutcome};
 use crate::audit::{AuditEvent, Auditor, FailReason};
 use crate::config::{ResourceKind, SchedulerKind, SimConfig};
 use crate::coordinator::control::ControlPlane;
 use crate::coordinator::migration::MigrationRequest;
+use crate::coordinator::resource::best_degree_swap;
 use crate::coordinator::scheduler::{
     schedule_worker_degraded, ActiveSet, ScheduleAction, SchedulerQueue,
     StepRequest,
@@ -67,7 +85,11 @@ enum Cmd {
     /// Push a step request; `log` is the trajectory's current context.
     Enqueue { req: StepRequest, log: Vec<i32> },
     /// Run the admission/preemption fixed point and report decisions.
-    Schedule { degraded: bool },
+    /// `cap` is the worker's current slot capacity
+    /// (`degree * max_batch` — degrees can change across resizes, so
+    /// the control plane sends it per pass rather than freezing it at
+    /// spawn).
+    Schedule { degraded: bool, cap: usize },
     /// One decode step over the active set.
     Decode,
     /// Remove a trajectory from the active set (segment finished).
@@ -109,7 +131,6 @@ enum SchedEvent {
 
 struct WorkerCfg {
     scheduler: SchedulerKind,
-    max_batch: usize,
     preemption: bool,
     temperature: f64,
     top_p: f64,
@@ -165,13 +186,13 @@ fn worker_main(
                 }
                 queue.push(req);
             }
-            Cmd::Schedule { degraded } => {
+            Cmd::Schedule { degraded, cap } => {
                 let mut events = Vec::new();
                 loop {
                     let action = schedule_worker_degraded(
                         &mut queue,
                         &active,
-                        cfg.max_batch,
+                        cap,
                         cfg.preemption,
                         degraded,
                     );
@@ -311,6 +332,9 @@ enum Phase {
     ToolWait,
     /// Tool finished but the KV transfer is still in flight.
     MigrationWait,
+    /// Drained off a worker that is part of an in-flight MP-group
+    /// resize; re-enqueues when the resize commits (or aborts).
+    Resizing,
     Done,
     Failed,
 }
@@ -359,6 +383,24 @@ struct Link {
 /// is in flight: (cache, context log, prefilled tokens).
 type MigPayload = (Box<TrajKv>, Vec<i32>, usize);
 
+/// Virtual rounds an in-flight resize takes to commit (the group
+/// regroup cost: weight resharding masked by the drained window).
+const RESIZE_LATENCY_ROUNDS: u64 = 16;
+/// Minimum virtual rounds between resize decisions (anti-thrash).
+const RESIZE_COOLDOWN_ROUNDS: u64 = 64;
+/// A swap must cut the estimated remaining makespan by >= 2% to fire.
+const RESIZE_MIN_GAIN: f64 = 0.98;
+
+/// An in-flight degree swap between workers `a` and `b`: both are
+/// drained, the swap commits at `done_vt` on the virtual clock.
+struct PendingResize {
+    a: usize,
+    b: usize,
+    done_vt: f64,
+    /// Trajectories parked off the two workers (`Phase::Resizing`).
+    parked: Vec<usize>,
+}
+
 struct Ctl<'a> {
     cfg: &'a ServeConfig,
     specs: &'a [TrajectorySpec],
@@ -378,7 +420,17 @@ struct Ctl<'a> {
     vt: f64,
     round: u64,
     round_dt: f64,
-    stride: Vec<u64>,
+    /// Straggler decode stride per worker (fault injection); the
+    /// effective stride also folds in the MP cadence (`mp_stride`).
+    straggler_stride: Vec<u64>,
+    /// Heterogeneous MP + live resizing enabled (`adaptive_mp`).
+    adaptive: bool,
+    resize: Option<PendingResize>,
+    /// A tool boundary occurred since the last resize check.
+    resize_check: bool,
+    /// No new resize decision before this virtual time (cooldown).
+    next_resize_vt: f64,
+    total_resizes: usize,
     t0: Instant,
     req_seq: u64,
     done: usize,
@@ -468,14 +520,45 @@ impl Ctl<'_> {
         self.send(w, Cmd::Enqueue { req, log: self.trajs[i].log.clone() })
     }
 
+    /// `w` is an endpoint of an in-flight resize (drained: no
+    /// admissions, no decode participation until the swap commits).
+    fn resizing_worker(&self, w: usize) -> bool {
+        self.resize.as_ref().is_some_and(|r| r.a == w || r.b == w)
+    }
+
+    /// MP decode cadence: a worker at degree `d` participates every
+    /// `round(base_time(d) / round_dt)`-th round, so high-MP workers
+    /// generate proportionally faster in virtual time (Formula 1).
+    fn mp_stride(&self, w: usize) -> u64 {
+        if !self.adaptive {
+            return 1;
+        }
+        let d = self.control.allocation.degrees[w];
+        let base = self.sim_cfg.model.base_time_at_mp(d);
+        ((base / self.round_dt).round() as u64).max(1)
+    }
+
+    /// Current slot capacity of `w`: degree-scaled running batch (KV
+    /// memory scales with the number of shards, as in the planner).
+    fn slot_cap(&self, w: usize) -> usize {
+        self.control.allocation.degrees[w] * self.cfg.max_batch
+    }
+
     /// Admission/preemption pass over every live worker with queued
-    /// work; processes decisions in worker order.
+    /// work; processes decisions in worker order. Workers being drained
+    /// by an in-flight resize are skipped: their queued work holds
+    /// until the swap commits.
     fn schedule_all(&mut self) -> anyhow::Result<()> {
         let targets: Vec<usize> = (0..self.links.len())
-            .filter(|&w| !self.crashed[w] && self.queued_ct[w] > 0)
+            .filter(|&w| {
+                !self.crashed[w]
+                    && self.queued_ct[w] > 0
+                    && !self.resizing_worker(w)
+            })
             .collect();
         for &w in &targets {
-            self.send(w, Cmd::Schedule { degraded: self.degraded })?;
+            let cap = self.slot_cap(w);
+            self.send(w, Cmd::Schedule { degraded: self.degraded, cap })?;
         }
         for &w in &targets {
             let Reply::Sched(events) = self.recv(w)? else {
@@ -552,7 +635,10 @@ impl Ctl<'_> {
             .filter(|&w| {
                 !self.crashed[w]
                     && self.active_ct[w] > 0
-                    && self.round % self.stride[w] == 0
+                    && !self.resizing_worker(w)
+                    && self.round
+                        % (self.straggler_stride[w] * self.mp_stride(w))
+                        == 0
             })
             .collect();
         for &w in &parts {
@@ -596,6 +682,10 @@ impl Ctl<'_> {
         self.send(w, Cmd::Deactivate { traj: i })?;
         self.active_ct[w] -= 1;
         self.control.router.on_leave(w);
+        // A segment boundary is a resize opportunity: the decision
+        // itself runs in `maybe_resize` after the decode round, so it
+        // cannot interleave with pending segment completions.
+        self.resize_check = true;
         let t = self.now();
         let kv_tokens = self.trajs[i].kv_tokens;
         self.control.router.set_cache(i, w, kv_tokens);
@@ -931,6 +1021,169 @@ impl Ctl<'_> {
         Ok(())
     }
 
+    /// Resize decision point (tool-call boundaries only): score the
+    /// live remaining load per worker and start the best degree swap if
+    /// it clears the min-gain bar. Runs entirely on virtual-clock state
+    /// and trajectory predictions, so same-seed runs decide
+    /// identically. Suppressed while degraded (post-crash capacity is
+    /// already cut; re-shaping it would fight the recovery path).
+    fn maybe_resize(&mut self) -> anyhow::Result<()> {
+        if !std::mem::take(&mut self.resize_check) {
+            return Ok(());
+        }
+        if !self.adaptive
+            || self.resize.is_some()
+            || self.degraded
+            || self.vt < self.next_resize_vt
+        {
+            return Ok(());
+        }
+        let n = self.links.len();
+        let mut loads = vec![0.0f64; n];
+        for st in &self.trajs {
+            if matches!(st.phase, Phase::Done | Phase::Failed) {
+                continue;
+            }
+            // KV residency pins a trajectory's remaining work to its
+            // home worker — that is what a swap rebalances.
+            let Some(home) = st.worker.or(st.kv_home) else { continue };
+            if self.crashed[home] {
+                continue;
+            }
+            loads[home] +=
+                (st.predicted - st.metrics.tokens_generated as f64).max(0.0);
+        }
+        let live: Vec<bool> = (0..n).map(|w| !self.crashed[w]).collect();
+        let degrees = self.control.allocation.degrees.clone();
+        let swap = best_degree_swap(
+            &degrees,
+            &loads,
+            &live,
+            &self.sim_cfg.model,
+            RESIZE_MIN_GAIN,
+        );
+        // Win or lose, hold the cooldown: re-scoring every tool
+        // boundary is pointless while the load picture barely moves.
+        self.next_resize_vt =
+            self.vt + RESIZE_COOLDOWN_ROUNDS as f64 * self.round_dt;
+        match swap {
+            Some((a, b, _)) => self.begin_resize(a, b),
+            None => Ok(()),
+        }
+    }
+
+    /// Start the degree swap `a <-> b`: drain both workers (park every
+    /// running trajectory; KV stays resident — the regroup is virtual
+    /// on the stub engine) and schedule the commit on the virtual
+    /// clock.
+    fn begin_resize(&mut self, a: usize, b: usize) -> anyhow::Result<()> {
+        let t = self.now();
+        let mut parked = Vec::new();
+        for w in [a, b] {
+            let ids: Vec<usize> = self
+                .trajs
+                .iter()
+                .enumerate()
+                .filter(|(_, st)| {
+                    st.phase == Phase::Running && st.worker == Some(w)
+                })
+                .map(|(id, _)| id)
+                .collect();
+            for id in ids {
+                self.send(w, Cmd::Deactivate { traj: id })?;
+                self.active_ct[w] -= 1;
+                self.control.router.on_leave(w);
+                {
+                    let st = &mut self.trajs[id];
+                    st.phase = Phase::Resizing;
+                    st.worker = None;
+                    st.metrics.span_begin(PhaseKind::ResizeWait, t);
+                }
+                self.audit_ev(
+                    t,
+                    AuditEvent::ResizeParked { traj: id, worker: w },
+                );
+                parked.push(id);
+            }
+        }
+        self.resize = Some(PendingResize {
+            a,
+            b,
+            done_vt: self.vt
+                + RESIZE_LATENCY_ROUNDS as f64 * self.round_dt,
+            parked,
+        });
+        Ok(())
+    }
+
+    /// Commit an in-flight resize whose virtual completion time has
+    /// passed: swap the degrees, audit against the live map, replan
+    /// placement over the remaining work, and re-enqueue the parked
+    /// trajectories.
+    fn pump_resize_completions(&mut self) -> anyhow::Result<()> {
+        if !self.resize.as_ref().is_some_and(|r| r.done_vt <= self.vt) {
+            return Ok(());
+        }
+        let r = self.resize.take().expect("resize due");
+        let t = self.now();
+        self.control.swap_degrees(r.a, r.b);
+        self.total_resizes += 1;
+        let da = self.control.allocation.degrees[r.a];
+        let db = self.control.allocation.degrees[r.b];
+        self.audit_ev(t, AuditEvent::Resized { worker: r.a, degree: da });
+        self.audit_ev(t, AuditEvent::Resized { worker: r.b, degree: db });
+        // The auditor checks this summary against its live worker->
+        // degree map: sum over the *survivors* only.
+        let live_workers = self.crashed.iter().filter(|c| !**c).count();
+        let live_gpus: usize = self
+            .control
+            .allocation
+            .degrees
+            .iter()
+            .enumerate()
+            .filter(|&(w, _)| !self.crashed[w])
+            .map(|(_, &d)| d)
+            .sum();
+        self.audit_ev(
+            t,
+            AuditEvent::Provisioned {
+                workers: live_workers,
+                gpus: live_gpus,
+                budget: self.sim_cfg.cluster.n_gpus,
+            },
+        );
+        // The rank -> worker map changed with the degrees: replan the
+        // placement DP over everything still in flight so routing
+        // follows the new shape (crashed workers stay fenced).
+        if self.control.planner.is_some() {
+            let remaining: Vec<(usize, f64)> = self
+                .trajs
+                .iter()
+                .enumerate()
+                .filter(|(_, st)| {
+                    !matches!(st.phase, Phase::Done | Phase::Failed)
+                })
+                .map(|(id, st)| (id, st.predicted))
+                .collect();
+            if !remaining.is_empty() {
+                self.control.replan_placement(&remaining);
+                for w in 0..self.crashed.len() {
+                    if self.crashed[w] {
+                        self.control.router.reassign_from(w);
+                    }
+                }
+            }
+        }
+        let mut parked = r.parked;
+        parked.sort_unstable();
+        for id in parked {
+            if self.trajs[id].phase == Phase::Resizing {
+                self.enqueue_step(id, t)?;
+            }
+        }
+        Ok(())
+    }
+
     /// Fire every scheduled crash due at `vt`; returns the torn-down
     /// workers so the caller can join their threads.
     fn fire_due_crashes(&mut self) -> anyhow::Result<Vec<usize>> {
@@ -1034,6 +1287,37 @@ impl Ctl<'_> {
                 s.displaced += 1;
             }
         }
+        // 3b. A crash on either endpoint aborts an in-flight resize:
+        //     the degrees never change and no `Resized` is emitted.
+        //     Parked trajectories whose KV lived on the dead worker are
+        //     displaced (full recompute); all of them re-queue after
+        //     the control-plane fence below. An unrelated crash leaves
+        //     the resize in flight (it commits on schedule), but the
+        //     sticky degraded mode blocks any *new* resize decisions.
+        let mut resize_resume: Vec<usize> = Vec::new();
+        if let Some(r) = self.resize.take() {
+            if r.a == w || r.b == w {
+                for &id in &r.parked {
+                    if self.trajs[id].phase != Phase::Resizing {
+                        continue;
+                    }
+                    if self.trajs[id].kv_home == Some(w) {
+                        self.audit_ev(
+                            t,
+                            AuditEvent::Displaced { traj: id, worker: w },
+                        );
+                        displace_kv(&mut self.trajs[id]);
+                        self.trajs[id].faulted = true;
+                        if let Some(s) = self.stats_mut() {
+                            s.displaced += 1;
+                        }
+                    }
+                    resize_resume.push(id);
+                }
+            } else {
+                self.resize = Some(r);
+            }
+        }
         // 4. Abort in-flight KV transfers touching the dead worker.
         let (dead, keep): (Vec<_>, Vec<_>) =
             self.inflight.drain(..).partition(|(_, r, _)| {
@@ -1092,6 +1376,13 @@ impl Ctl<'_> {
             self.trajs[id].faulted = true;
             self.enqueue_step(id, t)?;
         }
+        // Re-queue the aborted resize's parked trajectories last: the
+        // displaced ones recompute on a survivor, the partner worker's
+        // keep their resident KV.
+        resize_resume.sort_unstable();
+        for id in resize_resume {
+            self.enqueue_step(id, t)?;
+        }
         Ok(())
     }
 
@@ -1116,6 +1407,9 @@ impl Ctl<'_> {
         for (_, _, dv) in &self.inflight {
             next = next.min(*dv);
         }
+        if let Some(r) = &self.resize {
+            next = next.min(r.done_vt);
+        }
         if self.crash_next < self.crash_plan.len() {
             next = next.min(self.crash_plan[self.crash_next].0);
         }
@@ -1134,7 +1428,7 @@ impl Ctl<'_> {
 /// Run one rollout batch on per-worker threads over the `Send`-safe
 /// stub engine. Semantics mirror [`super::serve_rollout_single`] plus
 /// the three cluster fault classes (crashes, stragglers, cold spikes).
-pub fn serve_rollout_threaded(
+pub(crate) fn serve_rollout_threaded(
     engine: &Engine,
     cfg: &ServeConfig,
     history: &[TrajectorySpec],
@@ -1142,18 +1436,24 @@ pub fn serve_rollout_threaded(
 ) -> anyhow::Result<ServeOutcome> {
     let max_seq = engine.manifest.model.max_seq;
     let vocab = engine.manifest.model.vocab;
-    let specs: Vec<TrajectorySpec> = specs
-        .iter()
-        .map(|s| fit_to_ring(s, max_seq, cfg.token_scale))
-        .collect();
+    let fitted = fit_specs(specs, max_seq, cfg.token_scale);
+    let specs = fitted.specs;
 
     let mut sim_cfg = SimConfig::default();
     sim_cfg.cluster.n_gpus = cfg.n_workers;
-    sim_cfg.cluster.mp_degrees = vec![1];
     sim_cfg.cluster.max_batch_per_worker = cfg.max_batch;
     sim_cfg.model = crate::config::ModelCost::mini();
     sim_cfg.policy = cfg.policy;
-    sim_cfg.policy.resource = ResourceKind::Fixed(1);
+    if cfg.adaptive_mp {
+        // Heterogeneous provisioning: `n_workers` is the GPU *budget*;
+        // the resource planner (SA for heddle, Fixed-k for baselines)
+        // decides how many workers to form and at which degrees. Worker
+        // threads then stand in for MP groups.
+        sim_cfg.cluster.mp_degrees = vec![1, 2, 4, 8];
+    } else {
+        sim_cfg.cluster.mp_degrees = vec![1];
+        sim_cfg.policy.resource = ResourceKind::Fixed(1);
+    }
     sim_cfg.seed = cfg.seed;
     let mut control = ControlPlane::new(&sim_cfg, history, &specs);
     let n_workers = control.n_workers();
@@ -1179,12 +1479,29 @@ pub fn serve_rollout_threaded(
 
     let mut auditor = if cfg.audit || cfg!(debug_assertions) {
         let mut a = Auditor::new();
-        a.set_worker_slots(vec![cfg.max_batch; n_workers]);
+        // Degree-scaled slot caps, rescaled live on every `Resized`
+        // event via the slot unit (fixed mode: all degrees are 1, so
+        // this is the plain `max_batch` per worker).
+        a.set_worker_slots(
+            control
+                .allocation
+                .degrees
+                .iter()
+                .map(|&d| d * cfg.max_batch)
+                .collect(),
+        );
+        a.set_slot_unit(cfg.max_batch);
         control.audit_provision(&mut a, 0.0);
         for (i, s) in specs.iter().enumerate() {
             if let Some(w) = control.router.assigned_worker(s.id) {
                 a.record(0.0, AuditEvent::Placed { traj: i, worker: w });
             }
+        }
+        for &(i, dropped) in &fitted.truncated {
+            a.record(
+                0.0,
+                AuditEvent::SpecTruncated { traj: i, dropped_steps: dropped },
+            );
         }
         Some(a)
     } else {
@@ -1220,7 +1537,27 @@ pub fn serve_rollout_threaded(
         })
         .collect();
     let n = trajs.len();
-    let round_dt = sim_cfg.model.token_time(1, 1);
+    // One decode round = one token on the *fastest* worker class. In
+    // fixed mode that is the legacy MP=1 token time (byte-compatible
+    // with pre-adaptive runs); in adaptive mode it is the fastest valid
+    // degree's contention-free time, and slower degrees participate on
+    // an `mp_stride` cadence.
+    let round_dt = if cfg.adaptive_mp {
+        let m = &sim_cfg.model;
+        sim_cfg
+            .cluster
+            .mp_degrees
+            .iter()
+            .filter(|&&d| d >= m.min_mp)
+            .map(|&d| m.base_time_at_mp(d))
+            .fold(f64::INFINITY, f64::min)
+    } else {
+        sim_cfg.model.token_time(1, 1)
+    };
+    anyhow::ensure!(
+        round_dt.is_finite() && round_dt > 0.0,
+        "no valid MP degree for the serve cost model"
+    );
 
     std::thread::scope(|scope| -> anyhow::Result<ServeOutcome> {
         let mut links = Vec::with_capacity(n_workers);
@@ -1230,7 +1567,6 @@ pub fn serve_rollout_threaded(
             let (rtx, rrx) = channel::<Reply>();
             let wcfg = WorkerCfg {
                 scheduler: cfg.policy.scheduler,
-                max_batch: cfg.max_batch,
                 preemption: cfg.policy.preemption,
                 temperature: cfg.temperature,
                 top_p: cfg.top_p,
@@ -1260,7 +1596,12 @@ pub fn serve_rollout_threaded(
             vt: 0.0,
             round: 0,
             round_dt,
-            stride,
+            straggler_stride: stride,
+            adaptive: cfg.adaptive_mp,
+            resize: None,
+            resize_check: false,
+            next_resize_vt: 0.0,
+            total_resizes: 0,
             t0: Instant::now(),
             req_seq: 0,
             done: 0,
@@ -1304,6 +1645,7 @@ pub fn serve_rollout_threaded(
                     })?;
                 }
             }
+            ctl.pump_resize_completions()?;
             ctl.pump_migration_completions()?;
             ctl.pump_tools()?;
             if ctl.done >= n {
@@ -1311,6 +1653,7 @@ pub fn serve_rollout_threaded(
             }
             ctl.schedule_all()?;
             ctl.decode_round()?;
+            ctl.maybe_resize()?;
             if ctl.done >= n {
                 break;
             }
@@ -1348,9 +1691,13 @@ pub fn serve_rollout_threaded(
             }
             None => FaultStats::default(),
         };
-        let report = RolloutReport::from_trajectories(
+        let total_resizes = ctl.total_resizes;
+        let mut report = RolloutReport::from_trajectories(
             ctl.trajs.into_iter().map(|t| t.metrics).collect(),
         );
+        report.total_resizes = total_resizes;
+        report.truncated_specs = fitted.truncated.len();
+        report.truncated_steps = fitted.truncated_steps;
         let mut auditor = ctl.auditor;
         if let Some(a) = auditor.as_mut() {
             a.check_complete(wall);

@@ -1172,51 +1172,11 @@ impl<'a> Simulator<'a> {
     }
 }
 
-/// Convenience: simulate one rollout batch end-to-end.
-#[deprecated(note = "use crate::harness::Run: \
-                     Run::new(cfg, history, specs).exec()")]
-pub fn simulate(
-    cfg: &SimConfig,
-    history: &[TrajectorySpec],
-    specs: &[TrajectorySpec],
-) -> RolloutReport {
-    Simulator::new(cfg, history, specs).run()
-}
-
-/// Simulate with the lifecycle auditor attached and returned (CLI
-/// `--audit` dumps and differential decision checks).
-#[deprecated(note = "use crate::harness::Run: \
-                     Run::new(cfg, history, specs).audit().exec()")]
-pub fn simulate_audited(
-    cfg: &SimConfig,
-    history: &[TrajectorySpec],
-    specs: &[TrajectorySpec],
-) -> (RolloutReport, Auditor) {
-    Simulator::new(cfg, history, specs).run_audited()
-}
-
-/// Simulate under the configured fault plan (CLI `--faults`): auditor
-/// attached, fault-injection and recovery counters returned. With
-/// `cfg.fault.enabled` unset this degenerates to [`simulate_audited`]
-/// plus zeroed stats.
-#[deprecated(note = "use crate::harness::Run: \
-                     Run::new(cfg, history, specs).audit().faults(seed).exec()")]
-pub fn simulate_chaos(
-    cfg: &SimConfig,
-    history: &[TrajectorySpec],
-    specs: &[TrajectorySpec],
-) -> (RolloutReport, Auditor, FaultStats) {
-    Simulator::new(cfg, history, specs).run_chaos()
-}
-
 #[cfg(test)]
 mod tests {
-    // The unit tests below predate the `harness::Run` API and keep
-    // exercising the deprecated shims on purpose (the shims must stay
-    // behaviourally identical until they are removed).
-    #![allow(deprecated)]
     use super::*;
     use crate::config::{PolicyConfig, SimConfig};
+    use crate::harness::Run;
     use crate::predictor::history_workload;
     use crate::workload::{generate, Domain, WorkloadConfig};
 
@@ -1229,7 +1189,7 @@ mod tests {
         let history = history_workload(Domain::Coding, seed);
         let specs =
             generate(&WorkloadConfig::new(Domain::Coding, n_prompts, seed));
-        simulate(&cfg, &history, &specs)
+        Run::new(&cfg, &history, &specs).exec().unwrap().report
     }
 
     #[test]
@@ -1251,7 +1211,7 @@ mod tests {
         cfg.cluster.n_gpus = 4;
         cfg.policy = PolicyConfig::heddle();
         let history = history_workload(Domain::Math, 2);
-        let r = simulate(&cfg, &history, &specs);
+        let r = Run::new(&cfg, &history, &specs).exec().unwrap().report;
         for (t, s) in r.trajectories.iter().zip(&specs) {
             assert_eq!(t.tokens_generated, s.total_tokens());
             assert_eq!(t.steps, s.n_steps());
@@ -1371,7 +1331,9 @@ mod tests {
                 4,
                 cfg.seed,
             ));
-            let (r, mut audit) = simulate_audited(&cfg, &history, &specs);
+            let out =
+                Run::new(&cfg, &history, &specs).audit().exec().unwrap();
+            let (r, mut audit) = (out.report, out.audit.unwrap());
             assert!(audit.ok(), "{}", audit.report_violations());
             assert_eq!(audit.submitted(), specs.len());
             assert_eq!(audit.completed(), r.trajectories.len());
@@ -1396,8 +1358,18 @@ mod tests {
         let history = history_workload(Domain::Coding, 5);
         let specs =
             generate(&WorkloadConfig::new(Domain::Coding, 3, 5));
-        let (_, a) = simulate_audited(&cfg, &history, &specs);
-        let (_, b) = simulate_audited(&cfg, &history, &specs);
+        let a = Run::new(&cfg, &history, &specs)
+            .audit()
+            .exec()
+            .unwrap()
+            .audit
+            .unwrap();
+        let b = Run::new(&cfg, &history, &specs)
+            .audit()
+            .exec()
+            .unwrap()
+            .audit
+            .unwrap();
         let diff = diff_decisions(&a, &b);
         assert!(diff.is_empty(), "decision divergence: {diff:?}");
         // The differential harness must also *detect* divergence: the
@@ -1412,7 +1384,7 @@ mod tests {
         cfg.policy = PolicyConfig::verl(1);
         let history = history_workload(Domain::Math, 1);
         let specs = generate(&WorkloadConfig::new(Domain::Math, 1, 1));
-        let r = simulate(&cfg, &history, &specs);
+        let r = Run::new(&cfg, &history, &specs).exec().unwrap().report;
         assert_eq!(r.trajectories.len(), 16);
         assert!(r.makespan > 0.0);
     }
@@ -1443,8 +1415,12 @@ mod tests {
         let off = chaos_cfg(FaultConfig::default());
         assert!(!off.fault.enabled, "faults must default to off");
         let quiet = chaos_cfg(FaultConfig::quiescent(9));
-        let (ra, a) = simulate_audited(&off, &history, &specs);
-        let (rb, b, stats) = simulate_chaos(&quiet, &history, &specs);
+        let off_out =
+            Run::new(&off, &history, &specs).audit().exec().unwrap();
+        let (ra, a) = (off_out.report, off_out.audit.unwrap());
+        let quiet_out = Run::new(&quiet, &history, &specs).exec().unwrap();
+        let (rb, b, stats) =
+            (quiet_out.report, quiet_out.audit.unwrap(), quiet_out.faults);
         let diff = diff_decisions(&a, &b);
         assert!(diff.is_empty(), "quiescent plan diverged: {diff:?}");
         assert_eq!(ra.makespan, rb.makespan);
@@ -1476,12 +1452,15 @@ mod tests {
                 2,
                 cfg.seed,
             ));
-            let (r, audit, stats) = simulate_chaos(&cfg, &history, &specs);
+            let out = Run::new(&cfg, &history, &specs).exec();
             crate::prop_assert!(
-                audit.ok(),
-                "auditor violations under faults: {}",
-                audit.report_violations()
+                out.is_ok(),
+                "auditor violations under faults: {:?}",
+                out.err()
             );
+            let out = out.unwrap();
+            let (r, audit, stats) =
+                (out.report, out.audit.unwrap(), out.faults);
             crate::prop_assert!(
                 audit.completed() + audit.failed() == audit.submitted(),
                 "conservation broken: {} done + {} failed != {} submitted",
@@ -1523,7 +1502,8 @@ mod tests {
         let with_tools =
             specs.iter().filter(|s| s.n_steps() >= 2).count();
         assert!(with_tools > 0, "workload must exercise tool steps");
-        let (_, audit, stats) = simulate_chaos(&cfg, &history, &specs);
+        let out = Run::new(&cfg, &history, &specs).exec().unwrap();
+        let (audit, stats) = (out.audit.unwrap(), out.faults);
         assert!(audit.ok(), "{}", audit.report_violations());
         assert_eq!(stats.retry_exhausted, with_tools);
         assert_eq!(audit.failed(), with_tools);
@@ -1545,7 +1525,8 @@ mod tests {
             generate(&WorkloadConfig::new(Domain::Coding, 2, cfg.seed));
         let with_tools =
             specs.iter().filter(|s| s.n_steps() >= 2).count();
-        let (_, audit, stats) = simulate_chaos(&cfg, &history, &specs);
+        let out = Run::new(&cfg, &history, &specs).exec().unwrap();
+        let (audit, stats) = (out.audit.unwrap(), out.faults);
         assert!(audit.ok(), "{}", audit.report_violations());
         assert!(stats.tool_hangs > 0);
         assert_eq!(stats.retry_exhausted, with_tools);
@@ -1567,7 +1548,9 @@ mod tests {
         let history = history_workload(Domain::Coding, cfg.seed);
         let specs =
             generate(&WorkloadConfig::new(Domain::Coding, 4, cfg.seed));
-        let (r, audit, stats) = simulate_chaos(&cfg, &history, &specs);
+        let out = Run::new(&cfg, &history, &specs).exec().unwrap();
+        let (r, audit, stats) =
+            (out.report, out.audit.unwrap(), out.faults);
         assert!(audit.ok(), "{}", audit.report_violations());
         assert!(stats.worker_crashes >= 1, "no crash fired");
         assert!(stats.displaced > 0, "crash displaced nothing");
@@ -1588,8 +1571,10 @@ mod tests {
         let history = history_workload(Domain::Coding, cfg.seed);
         let specs =
             generate(&WorkloadConfig::new(Domain::Coding, 3, cfg.seed));
-        let (_, a, sa) = simulate_chaos(&cfg, &history, &specs);
-        let (_, b, sb) = simulate_chaos(&cfg, &history, &specs);
+        let ra = Run::new(&cfg, &history, &specs).exec().unwrap();
+        let rb = Run::new(&cfg, &history, &specs).exec().unwrap();
+        let (a, sa) = (ra.audit.unwrap(), ra.faults);
+        let (b, sb) = (rb.audit.unwrap(), rb.faults);
         assert!(sa.injected() > 0, "chaos run injected nothing");
         assert_eq!(sa, sb, "fault counters diverged across same-seed runs");
         let diff = diff_decisions(&a, &b);

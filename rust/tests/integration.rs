@@ -7,7 +7,7 @@
 
 use heddle::config::{ModelCost, PolicyConfig, SimConfig};
 use heddle::coordinator::control::ControlPlane;
-use heddle::harness::Run;
+use heddle::harness::{Run, ServeRun};
 use heddle::metrics::{PhaseKind, RolloutReport};
 use heddle::predictor::history_workload;
 use heddle::workload::{generate, Domain, WorkloadConfig};
@@ -83,24 +83,6 @@ fn rollout_deterministic_across_runs() {
     for (x, y) in a.trajectories.iter().zip(&b.trajectories) {
         assert_eq!(x.finish_time, y.finish_time);
     }
-}
-
-#[test]
-fn deprecated_shims_match_harness() {
-    // The pre-harness entry points stay as thin wrappers; they must
-    // produce the exact same rollout as `Run`.
-    let cfg = small_cfg(PolicyConfig::heddle());
-    let history = history_workload(Domain::Coding, 5);
-    let specs = generate(&WorkloadConfig::new(Domain::Coding, 2, 5));
-    #[allow(deprecated)]
-    let old = heddle::sim::simulate(&cfg, &history, &specs);
-    let new = Run::new(&cfg, &history, &specs).exec().unwrap().report;
-    assert_eq!(old.makespan, new.makespan);
-    assert_eq!(old.total_tokens, new.total_tokens);
-    #[allow(deprecated)]
-    let (old_r, old_a) = heddle::sim::simulate_audited(&cfg, &history, &specs);
-    assert!(old_a.ok(), "{}", old_a.report_violations());
-    assert_eq!(old_r.makespan, new.makespan);
 }
 
 #[test]
@@ -407,10 +389,9 @@ fn sim_and_serve_emit_identical_span_kinds() {
         audit: true,
         ..Default::default()
     };
-    let serve_out = heddle::serve::serve_rollout(
-        &engine, &serve_cfg, &history, &specs,
-    )
-    .unwrap();
+    let serve_out = ServeRun::new(&engine, &serve_cfg, &history, &specs)
+        .exec()
+        .unwrap();
     let audit = serve_out.run.audit.as_ref().expect("auditing enabled");
     assert!(audit.ok(), "{}", audit.report_violations());
 
@@ -461,9 +442,9 @@ fn serve_synthetic_spans_satisfy_wall_clock_contract() {
         audit: true,
         ..Default::default()
     };
-    let out =
-        heddle::serve::serve_rollout(&engine, &cfg, &history, &specs)
-            .unwrap();
+    let out = ServeRun::new(&engine, &cfg, &history, &specs)
+        .exec()
+        .unwrap();
     let audit = out.run.audit.as_ref().expect("auditing enabled");
     assert!(audit.ok(), "{}", audit.report_violations());
     for t in &out.report().trajectories {
@@ -491,7 +472,7 @@ mod serve_fault_parity {
     use heddle::config::ResourceKind;
     use heddle::fault::{FaultConfig, FaultPlan};
     use heddle::harness::ServeRun;
-    use heddle::serve::{fit_to_ring, serve_rollout, ServeConfig};
+    use heddle::serve::{fit_to_ring, ServeConfig};
     use heddle::workload::{StepSpec, TrajectorySpec};
     use std::collections::{BTreeSet, HashMap, HashSet};
 
@@ -603,7 +584,8 @@ mod serve_fault_parity {
                 fault,
                 ..Default::default()
             };
-            let srv = serve_rollout(&engine, &serve_cfg, &history, &specs)
+            let srv = ServeRun::new(&engine, &serve_cfg, &history, &specs)
+                .exec()
                 .map_err(|e| format!("serve: {e}"))?;
             let sim_cfg = mirror_sim_cfg(
                 policy, n_workers, max_batch, seed, fault,
@@ -717,7 +699,8 @@ mod serve_fault_parity {
                 fault,
                 ..Default::default()
             };
-            let out = serve_rollout(&engine, &cfg, &history, &specs)
+            let out = ServeRun::new(&engine, &cfg, &history, &specs)
+                .exec()
                 .unwrap_or_else(|e| panic!("fault seed {fault_seed}: {e}"));
             let audit = out.run.audit.as_ref().expect("auditing enabled");
             assert!(
@@ -917,7 +900,8 @@ mod serve_fault_parity {
             fault,
             ..Default::default()
         };
-        let out = serve_rollout(&engine, &cfg, &history, &specs)
+        let out = ServeRun::new(&engine, &cfg, &history, &specs)
+            .exec()
             .expect("cold-spike chaos run failed");
         let audit = out.run.audit.as_ref().expect("auditing enabled");
         assert!(audit.ok(), "{}", audit.report_violations());
@@ -926,6 +910,165 @@ mod serve_fault_parity {
             out.run.faults.cold_spikes >= 1,
             "no cold spike despite {n} concurrent calls at prob 1.0"
         );
+    }
+}
+
+// ---- adaptive MP resizing on the threaded backend ----------------------
+
+/// Live trajectory-adaptive MP resizing (`ServeConfig::adaptive_mp`):
+/// the control plane starts from the SA-planned heterogeneous
+/// allocation, then swaps MP degrees between live workers at tool-call
+/// boundaries when the predicted-load imbalance justifies it. Every
+/// `Resized` event is validated by the auditor's live worker→group
+/// mapping invariant, decisions run on the virtual clock (same-seed
+/// byte-identical), and resizing composes with the full fault surface.
+#[cfg(not(feature = "pjrt"))]
+mod adaptive_mp_serve {
+    use super::*;
+    use heddle::audit::{AuditEvent, Auditor};
+    use heddle::fault::FaultConfig;
+    use heddle::serve::ServeConfig;
+
+    fn adaptive_cfg(seed: u64, fault: FaultConfig) -> ServeConfig {
+        ServeConfig {
+            // Under adaptive MP, `n_workers` is the GPU budget; the
+            // planner decides how many workers carve it up.
+            n_workers: 8,
+            max_batch: 4,
+            policy: PolicyConfig::heddle(),
+            tool_scale: 1.0,
+            token_scale: 1.0,
+            seed,
+            audit: true,
+            adaptive_mp: true,
+            fault,
+            ..Default::default()
+        }
+    }
+
+    /// The ordered (worker, degree) sequence of committed resizes.
+    fn resized_trace(audit: &Auditor) -> Vec<(usize, usize)> {
+        audit
+            .events()
+            .iter()
+            .filter_map(|r| match r.ev {
+                AuditEvent::Resized { worker, degree } => {
+                    Some((worker, degree))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Acceptance criterion: a fault-free adaptive run on a skewed
+    /// workload commits at least one resize across a few seeds, passes
+    /// the resize auditor invariant, and survives the same-seed
+    /// determinism gate (resize decisions live on the virtual clock).
+    #[test]
+    fn adaptive_serve_emits_resizes_and_stays_deterministic() {
+        let engine = heddle::runtime::Engine::synthetic();
+        let mut total_resizes = 0usize;
+        for seed in [1u64, 2, 3] {
+            let mut wl = WorkloadConfig::new(Domain::Coding, 4, seed);
+            wl.group_size = 8;
+            let specs = generate(&wl);
+            let history = history_workload(Domain::Coding, seed);
+            let cfg = adaptive_cfg(seed, FaultConfig::default());
+            let out = ServeRun::new(&engine, &cfg, &history, &specs)
+                .determinism_check()
+                .exec()
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert!(out.run.determinism_decisions.unwrap() > 0);
+            let audit = out.run.audit.as_ref().expect("auditing enabled");
+            assert!(
+                audit.ok(),
+                "seed {seed}: {}",
+                audit.report_violations()
+            );
+            assert_eq!(
+                audit.completed() + audit.failed(),
+                audit.submitted()
+            );
+            assert_eq!(
+                out.run.report.total_resizes,
+                resized_trace(audit).len(),
+                "report counter disagrees with audited resize events"
+            );
+            total_resizes += out.run.report.total_resizes;
+        }
+        assert!(
+            total_resizes >= 1,
+            "adaptive MP never resized across three skewed-workload seeds"
+        );
+    }
+
+    /// Property (ISSUE 10 satellite): for random workloads and random
+    /// fault plans, two same-seed adaptive runs emit identical `Resized`
+    /// event traces, conservation holds, and the auditor passes with
+    /// resizing enabled.
+    #[test]
+    fn adaptive_resize_same_seed_traces_identical_under_faults() {
+        let engine = heddle::runtime::Engine::synthetic();
+        heddle::testkit::check("adaptive_resize_property", 10, |g| {
+            let mut rng = g.rng();
+            let seed = 1 + rng.next_u64() % 100_000;
+            let mut fault = FaultConfig::default();
+            // Half the cases run clean, half under a random chaos mix
+            // (resizing must compose with the full fault surface).
+            if rng.next_u64() % 2 == 0 {
+                fault.enabled = true;
+                fault.seed = 1 + rng.next_u64() % 100_000;
+                fault.tool_fail_prob = rng.f64() * 0.3;
+                fault.tool_hang_prob = rng.f64() * 0.1;
+                fault.worker_crash_prob = rng.f64() * 0.8;
+                fault.worker_mttf = 0.05 + rng.f64();
+                fault.straggler_prob = rng.f64() * 0.3;
+            }
+            let mut wl = WorkloadConfig::new(Domain::Coding, 3, seed);
+            wl.group_size = 6;
+            let specs = generate(&wl);
+            let history = history_workload(Domain::Coding, seed);
+            let cfg = adaptive_cfg(seed, fault);
+            let a = ServeRun::new(&engine, &cfg, &history, &specs)
+                .audit()
+                .exec()
+                .map_err(|e| format!("first run: {e}"))?;
+            let b = ServeRun::new(&engine, &cfg, &history, &specs)
+                .audit()
+                .exec()
+                .map_err(|e| format!("second run: {e}"))?;
+            let aa = a.run.audit.as_ref().expect("auditor attached");
+            let ab = b.run.audit.as_ref().expect("auditor attached");
+            heddle::prop_assert!(
+                aa.ok(),
+                "auditor violations with resizing: {}",
+                aa.report_violations()
+            );
+            heddle::prop_assert!(
+                aa.completed() + aa.failed() == aa.submitted(),
+                "conservation broken: {} + {} != {}",
+                aa.completed(),
+                aa.failed(),
+                aa.submitted()
+            );
+            heddle::prop_assert!(
+                aa.submitted() == specs.len(),
+                "submitted {} != specs {}",
+                aa.submitted(),
+                specs.len()
+            );
+            heddle::prop_assert!(
+                resized_trace(aa) == resized_trace(ab),
+                "same-seed resize traces diverge: {:?} vs {:?}",
+                resized_trace(aa),
+                resized_trace(ab)
+            );
+            heddle::prop_assert!(
+                a.run.report.total_resizes == b.run.report.total_resizes,
+                "resize counters diverge"
+            );
+            Ok(())
+        });
     }
 }
 
@@ -994,8 +1137,9 @@ fn serve_small_rollout_end_to_end() {
         seed: 7,
         ..Default::default()
     };
-    let out =
-        heddle::serve::serve_rollout(&engine, &cfg, &history, &specs).unwrap();
+    let out = ServeRun::new(&engine, &cfg, &history, &specs)
+        .exec()
+        .unwrap();
     assert_eq!(out.report().trajectories.len(), 4);
     assert!(out.tokens_generated > 0);
     for t in &out.report().trajectories {
@@ -1034,8 +1178,9 @@ fn serve_chaos_exhausts_retry_budget_and_conserves() {
         .map(|s| heddle::serve::fit_to_ring(s, max_seq, cfg.token_scale))
         .filter(|s| s.n_steps() >= 2)
         .count();
-    let out =
-        heddle::serve::serve_rollout(&engine, &cfg, &history, &specs).unwrap();
+    let out = ServeRun::new(&engine, &cfg, &history, &specs)
+        .exec()
+        .unwrap();
     let audit = out.run.audit.as_ref().expect("auditing enabled");
     assert!(audit.ok(), "{}", audit.report_violations());
     assert_eq!(audit.completed() + audit.failed(), audit.submitted());
